@@ -1,0 +1,159 @@
+"""Generate the data-driven sections of EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report
+writes markdown fragments to experiments/md/*.md:
+  dryrun.md    — §Dry-run per-combo table (memory, collectives, compile)
+  roofline.md  — §Roofline three-term table + bottleneck + useful ratio
+  repro_*.md   — paper-experiment tables from experiments/results/*.json
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import summarize_dir, summarize_file
+
+
+def _fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f} MB"
+    return f"{b/1e3:.0f} KB"
+
+
+def dryrun_table(d="experiments/dryrun", mesh="16x16", mode="zampling"):
+    lines = [
+        "| arch | shape | status | compile (s) | HBM temp+args | "
+        "AR | AG | A2A / CP | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        base = os.path.basename(path)
+        if f"_{mesh}_{mode}.json" not in base:
+            continue
+        r = json.load(open(path))
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | "
+                         f"| {r['reason']} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | "
+                         f"| {r['error'][:60]} |")
+            continue
+        c = r["collective_bytes_per_device"]
+        hbm = r["memory"]["temp_bytes"] + r["memory"]["argument_bytes"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} "
+            f"| {_fmt_bytes(hbm)} "
+            f"| {_fmt_bytes(c['all-reduce'])} | {_fmt_bytes(c['all-gather'])} "
+            f"| {_fmt_bytes(c['all-to-all'] + c['collective-permute'])} "
+            f"| {r.get('note','')} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(d="experiments/dryrun", mesh="16x16", mode="zampling"):
+    rows = summarize_dir(d, mesh=mesh, mode=mode)
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound | "
+        "MODEL/HLO flops | next move |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} "
+            f"| {r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} "
+            f"| **{r['bound']}** | {r['useful_ratio']:.2f} "
+            f"| {r['move_next']} |"
+        )
+    return "\n".join(lines)
+
+
+def repro_tables():
+    out = {}
+    for path in sorted(glob.glob("experiments/results/*.json")):
+        name = os.path.splitext(os.path.basename(path))[0]
+        rows = json.load(open(path))
+        if not rows or not isinstance(rows, list) or not isinstance(rows[0],
+                                                                    dict):
+            continue
+        cols = [c for c in rows[0] if c != "bench"]
+        lines = ["| " + " | ".join(cols) + " |",
+                 "|" + "---|" * len(cols)]
+        for r in rows:
+            lines.append(
+                "| " + " | ".join(
+                    f"{r.get(c):.4f}" if isinstance(r.get(c), float)
+                    else str(r.get(c)) for c in cols
+                ) + " |"
+            )
+        out[name] = "\n".join(lines)
+    return out
+
+
+def baseline_table(d="experiments/dryrun"):
+    """Zampling vs dense-DP train_4k comparison (where both exist)."""
+    lines = [
+        "| arch | mode | HBM temp | AR | AG | flops/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(d, "*train_4k_16x16_*.json"))):
+        r = json.load(open(path))
+        if r.get("skipped") or "error" in r:
+            continue
+        base = path.replace("_zampling.json", "_baseline.json")
+        if r["mode"] == "zampling" and not os.path.exists(base):
+            continue
+        c = r["collective_bytes_per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['mode']} "
+            f"| {_fmt_bytes(r['memory']['temp_bytes'])} "
+            f"| {_fmt_bytes(c['all-reduce'])} | {_fmt_bytes(c['all-gather'])} "
+            f"| {r['flops_per_device']:.3g} |"
+        )
+    return "\n".join(lines)
+
+
+def splice_experiments_md():
+    """Replace the <!-- *_TABLE --> markers in EXPERIMENTS.md."""
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    single = "### Single pod (16x16)\n\n" + dryrun_table()
+    multi = ""
+    if glob.glob("experiments/dryrun/*_2x16x16_*.json"):
+        multi = "### Multi-pod (2x16x16)\n\n" + dryrun_table(mesh="2x16x16")
+    reps = {
+        "<!-- DRYRUN_TABLE -->": single,
+        "<!-- ROOFLINE_TABLE -->": roofline_table(),
+        "<!-- BASELINE_TABLE -->": baseline_table(),
+        "<!-- MULTIPOD_NOTE -->": multi,
+    }
+    for marker, table in reps.items():
+        if marker in text:
+            text = text.replace(marker, marker + "\n\n" + table)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+
+
+def main():
+    os.makedirs("experiments/md", exist_ok=True)
+    with open("experiments/md/dryrun.md", "w") as f:
+        f.write("### Single pod (16x16)\n\n")
+        f.write(dryrun_table() + "\n\n")
+        if glob.glob("experiments/dryrun/*_2x16x16_*.json"):
+            f.write("### Multi-pod (2x16x16)\n\n")
+            f.write(dryrun_table(mesh="2x16x16") + "\n")
+    with open("experiments/md/roofline.md", "w") as f:
+        f.write(roofline_table() + "\n")
+    for name, table in repro_tables().items():
+        with open(f"experiments/md/repro_{name}.md", "w") as f:
+            f.write(table + "\n")
+    splice_experiments_md()
+    print("wrote experiments/md/*.md and spliced EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

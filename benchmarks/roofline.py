@@ -1,0 +1,120 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms per (arch, shape, mesh), all derived from the compiled dry-run:
+
+  t_compute    = HLO_FLOPs/device / peak_FLOPs        (197 TF bf16, v5e)
+  t_memory     = HLO_bytes/device / HBM_bw            (819 GB/s)
+  t_collective = collective_bytes/device / link_bw    (~50 GB/s ICI)
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs_global (catches remat and
+reconstruction overhead).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s ICI per chip (v5e, 1 usable link assumption)
+
+
+def _model_flops(arch: str, shape: str, chips: int) -> float:
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs.base import active_param_count_estimate
+    from repro.configs.registry import get_arch, get_shape
+
+    cfg = get_arch(arch)
+    s = get_shape(shape)
+    n_active = active_param_count_estimate(cfg)
+    if s.kind == "train":
+        tokens = s.global_batch * s.seq_len
+        return 6.0 * n_active * tokens
+    if s.kind == "prefill":
+        tokens = s.global_batch * s.seq_len
+        return 2.0 * n_active * tokens
+    tokens = s.global_batch  # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def summarize_file(path: str) -> Dict:
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("skipped") or "error" in rec:
+        return rec
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    flops_dev = float(rec["flops_per_device"])
+    bytes_dev = float(rec["bytes_accessed_per_device"])
+    coll_dev = float(sum(rec["collective_bytes_per_device"].values()))
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    mf = _model_flops(rec["arch"], rec["shape"], chips)
+    useful = mf / max(flops_dev * chips, 1.0)
+    suggestions = {
+        "compute": "raise arithmetic intensity: larger per-chip batch or "
+                   "fewer recomputed FLOPs (remat policy)",
+        "memory": "cut bytes/step: fuse reconstruction into consumers, "
+                  "bf16 residuals, smaller CE/f32 footprint",
+        "collective": "shrink traffic on the dominant collective: bit-pack "
+                      "masks, reshard weights sharding-major, overlap "
+                      "reduce with compute",
+    }
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec.get("mode", ""),
+        "t_compute_ms": t_comp * 1e3,
+        "t_memory_ms": t_mem * 1e3,
+        "t_collective_ms": t_coll * 1e3,
+        "bound": bound,
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_ratio": useful,
+        "hbm_temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "collectives": rec["collective_bytes_per_device"],
+        "move_next": suggestions[bound],
+    }
+
+
+def summarize_dir(d: str, mesh: str = "16x16", mode: str = "zampling"
+                  ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        base = os.path.basename(path)
+        if not base.endswith(f"_{mesh}_{mode}.json"):
+            continue
+        r = summarize_file(path)
+        if r.get("skipped") or "error" in r:
+            continue
+        rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
+           "| useful | temp GB |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} "
+            f"| {r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} "
+            f"| **{r['bound']}** | {r['useful_ratio']:.2f} "
+            f"| {r['hbm_temp_gb']:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = summarize_dir(sys.argv[1] if len(sys.argv) > 1 else
+                         "experiments/dryrun")
+    print(markdown_table(rows))

@@ -1,0 +1,176 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; full row dumps land in
+experiments/results/<bench>.json.  ``--full`` switches to the paper's
+full grids (hours on CPU); default is the quick CI-scale pass that
+still exercises every claim.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,...]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def _dump(name, rows):
+    os.makedirs("experiments/results", exist_ok=True)
+    with open(f"experiments/results/{name}.json", "w") as f:
+        json.dump(rows, f, indent=2, default=str)
+
+
+def bench_kernel_reconstruct():
+    """Microbenchmark of the hot op (ref vs pallas-interpret on CPU)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.qspec import make_qspec
+    from repro.kernels import ops
+
+    spec = make_qspec(0, (1024, 1024), 1024, compression=32, d=8, window=512)
+    z = jnp.asarray(
+        (np.random.RandomState(0).rand(spec.n) < 0.5), jnp.float32
+    )
+    out = {}
+    for impl in ("ref", "pallas"):
+        f = jax.jit(lambda z_, impl=impl: ops.reconstruct(spec, z_, impl=impl))
+        f(z).block_until_ready()
+        t0 = time.perf_counter()
+        iters = 20 if impl == "ref" else 3
+        for _ in range(iters):
+            f(z).block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        out[impl] = us
+        _emit(f"kernel_qz_reconstruct_{impl}", us,
+              f"m={spec.m};n={spec.n};d={spec.d}")
+    return [out]
+
+
+def bench_table1(full=False):
+    from repro.experiments import comm_savings_table
+
+    t0 = time.perf_counter()
+    rows = comm_savings_table()
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        _emit("table1_comm_savings", us / len(rows),
+              f"{r['method']}:client={r['client_savings']:.0f}x"
+              f";server={r['server_savings']:.2f}x")
+    return rows
+
+
+def bench_table2(full=False):
+    from repro.experiments import run_local_compression
+
+    t0 = time.perf_counter()
+    rows = run_local_compression(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("table2_compression", us,
+              f"d={r['d']};m/n={r['compression']}"
+              f";sampled={r['sampled_acc']:.3f}")
+    return rows
+
+
+def bench_fig4(full=False):
+    from repro.experiments import run_federated
+
+    t0 = time.perf_counter()
+    rows = run_federated(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("fig4_federated", us,
+              f"m/n={r['compression']};acc={r['final_sampled_acc']:.3f}"
+              f";client_savings={r['client_savings']:.0f}x")
+    return rows
+
+
+def bench_table4(full=False):
+    from repro.experiments import run_sensitivity
+
+    t0 = time.perf_counter()
+    rows = run_sensitivity(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("table4_sensitivity", us,
+              f"{r['training']};tau={r['tau']}"
+              f";sens={r['avg_sensitivity']:.4f}")
+    return rows
+
+
+def bench_fig5(full=False):
+    from repro.experiments import run_integrality
+
+    t0 = time.perf_counter()
+    rows = run_integrality(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("fig5_integrality", us,
+              f"beta={r['beta']};gap={r['integrality_gap']:.3f}")
+    return rows
+
+
+def bench_fig6(full=False):
+    from repro.experiments import run_zhou_comparison
+
+    t0 = time.perf_counter()
+    rows = run_zhou_comparison(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("fig6_zhou", us,
+              f"{r['method']};mean={r['mean_sampled_acc']:.3f}"
+              f";best={r['best_mask_acc']:.3f}")
+    return rows
+
+
+def bench_roofline(full=False):
+    """Roofline terms per (arch x shape) from the dry-run artifacts."""
+    from benchmarks.roofline import summarize_dir
+
+    rows = summarize_dir("experiments/dryrun")
+    for r in rows:
+        _emit("roofline", 0.0,
+              f"{r['arch']}/{r['shape']}:bound={r['bound']}"
+              f";t_comp={r['t_compute_ms']:.2f}ms"
+              f";t_mem={r['t_memory_ms']:.2f}ms"
+              f";t_coll={r['t_collective_ms']:.2f}ms")
+    return rows
+
+
+BENCHES = {
+    "kernel": lambda full: bench_kernel_reconstruct(),
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "fig4": bench_fig4,
+    "table4": bench_table4,
+    "fig5": bench_fig5,
+    "fig6": bench_fig6,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in only:
+        try:
+            rows = BENCHES[name](args.full)
+            _dump(name, rows)
+        except Exception as e:  # noqa: BLE001
+            _emit(name, 0.0, f"ERROR:{e}")
+
+
+if __name__ == "__main__":
+    main()

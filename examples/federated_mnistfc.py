@@ -1,0 +1,66 @@
+"""FEDERATED ZAMPLING end-to-end (paper §3.2 setup, CPU scale).
+
+10 clients, MNISTFC-family network, m/n = 8: each round the clients
+upload n BITS (the sampled masks) instead of 32m float bits — a 256x
+reduction — and the server averages masks into the new probability
+vector.
+
+  PYTHONPATH=src python examples/federated_mnistfc.py [--rounds 25]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    FederatedConfig, ZamplingConfig, build_specs, federated_round, init_state,
+)
+from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
+from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_accuracy, mlp_loss
+from repro.train import evaluate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=25)
+ap.add_argument("--clients", type=int, default=10)
+ap.add_argument("--local-steps", type=int, default=30)
+ap.add_argument("--compression", type=float, default=8.0)
+args = ap.parse_args()
+
+ds = make_teacher_dataset(n_train=8000, n_test=1500, seed=0)
+template = init_mlp_params(jax.random.PRNGKey(0), SMALL_DIMS)
+zspecs = build_specs(template, ZamplingConfig(
+    compression=args.compression, d=10, window=128, min_size=128))
+state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
+
+bits = zspecs.comm_bits_per_round()
+print(f"m={zspecs.m_total} n={zspecs.n_total}; client upload "
+      f"{bits['client_up']/8/1024:.1f} KiB/round vs naive "
+      f"{bits['naive_client_up']/8/1024:.1f} KiB "
+      f"({bits['naive_client_up']/bits['client_up']:.0f}x less)")
+
+clients = iid_client_split(ds, args.clients)
+stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
+fcfg = FederatedConfig(num_clients=args.clients,
+                       local_steps=args.local_steps, local_lr=0.5)
+acc = jax.jit(lambda p: mlp_accuracy(
+    p, {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}))
+
+
+@jax.jit
+def round_fn(state, batch, key):
+    return federated_round(zspecs, state, mlp_loss, batch, key, fcfg)
+
+
+key = jax.random.PRNGKey(0)
+for r in range(args.rounds):
+    xs, ys = next(stream)
+    key, sub = jax.random.split(key)
+    state, met = round_fn(state, {"x": jnp.asarray(xs), "y": jnp.asarray(ys)},
+                          sub)
+    if (r + 1) % 5 == 0:
+        ms, std = evaluate(zspecs, state, acc, jax.random.PRNGKey(3),
+                           n_samples=10)
+        print(f"round {r+1:3d}: loss={met['loss']:.3f} "
+              f"sampled-acc={ms:.3f}+-{std:.3f}")
+print("done — every upload in that run was a binary mask, never a float.")

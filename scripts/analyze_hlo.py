@@ -1,0 +1,57 @@
+"""Dump the largest result arrays + collectives of one dry-run combo.
+
+  python scripts/analyze_hlo.py <arch> <shape> [mode]
+"""
+import sys
+
+sys.path.insert(0, "src")
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re  # noqa: E402
+from collections import Counter  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.dryrun import (  # noqa: E402
+    DTYPE_BYTES,
+    build_decode,
+    build_prefill,
+    build_train_baseline,
+    build_train_zampling,
+)
+from repro.configs.registry import get_arch, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+mode = sys.argv[3] if len(sys.argv) > 3 else "zampling"
+cfg = get_arch(arch)
+shape = get_shape(shape_name)
+mesh = make_production_mesh()
+if shape.kind == "train":
+    b = build_train_zampling if mode == "zampling" else build_train_baseline
+    jf, args, _ = b(cfg, shape, mesh)
+elif shape.kind == "prefill":
+    jf, args, _ = build_prefill(cfg, shape, mesh)
+else:
+    wo = 4096 if (shape_name == "long_500k" and cfg.window is None
+                  and cfg.family in ("dense", "moe")) else None
+    jf, args, _ = build_decode(cfg, shape, mesh, window_override=wo)
+with jax.set_mesh(mesh):
+    c = jf.lower(*args).compile()
+print("temp GB:", c.memory_analysis().temp_size_in_bytes / 1e9)
+txt = c.as_text()
+sizes = Counter()
+for m in re.finditer(r"= (\w+)\[([0-9,]+)\]\{[^}]*\} (\w[\w-]*)\(", txt):
+    dt, dims, op = m.group(1), m.group(2), m.group(3)
+    if dt not in DTYPE_BYTES:
+        continue
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    nb = n * DTYPE_BYTES[dt]
+    if nb > 200e6:
+        sizes[(dt, dims, op, nb)] += 1
+for (dt, dims, op, nb), cnt in sorted(sizes.items(),
+                                      key=lambda kv: -kv[0][3])[:20]:
+    print(f"{nb/1e9:7.2f}GB x{cnt:3d}  {dt}[{dims}] {op}")

@@ -1,0 +1,54 @@
+"""Checkpointing: pytree <-> npz with path-flattened keys + JSON meta.
+
+A Zampling checkpoint is tiny by construction: the Q matrix is never
+stored (it regenerates from ``meta['q_seed']``), so the artifact is the
+score vectors (n floats ~ m/32), dense leaves, and optimizer state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None
+                    ) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez_compressed(path, **arrays)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta or {}, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, template: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    meta = {}
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

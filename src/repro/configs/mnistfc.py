@@ -1,0 +1,13 @@
+"""The paper's own architectures (MNIST feedforward, §3).
+
+Not part of the assigned-arch pool; used by the faithful-reproduction
+experiments and benchmarks.  SMALL: 784-20-20-10 (§3.1, §3.3);
+MNISTFC: 784-300-100-10 = 266,610 params (§3.2, App. B.1).
+"""
+
+from ..models.mlp import MNISTFC_DIMS, SMALL_DIMS, param_count
+
+SMALL = SMALL_DIMS
+MNISTFC = MNISTFC_DIMS
+
+assert param_count(MNISTFC) == 266_610  # paper's figure, §3.2

@@ -1,0 +1,33 @@
+"""Zampling core — the paper's contribution as composable JAX modules."""
+
+from .federated import FederatedConfig, federated_round, local_update, sharded_client_update
+from .qspec import QSpec, make_qspec, row_indices, row_values
+from .reconstruct import materialize_q, reconstruct_ref
+from .sampling import (
+    clip_probs,
+    discretize_mask,
+    expected_mask,
+    init_scores,
+    sample_mask,
+    sample_mask_st,
+)
+from .zampling import (
+    ZamplingConfig,
+    ZamplingSpecs,
+    build_specs,
+    init_state,
+    sample_masks,
+    sample_weights,
+    state_spec,
+    weights_from_masks,
+)
+
+__all__ = [
+    "FederatedConfig", "federated_round", "local_update",
+    "sharded_client_update", "QSpec", "make_qspec", "row_indices",
+    "row_values", "materialize_q", "reconstruct_ref", "clip_probs",
+    "discretize_mask", "expected_mask", "init_scores", "sample_mask",
+    "sample_mask_st", "ZamplingConfig", "ZamplingSpecs", "build_specs",
+    "init_state", "sample_masks", "sample_weights", "state_spec",
+    "weights_from_masks",
+]

@@ -1,0 +1,97 @@
+"""Reference (pure-jnp) reconstruction ``w = Q z``.
+
+This is the oracle the Pallas kernel and the distributed shard_map op
+are validated against, and the default path on CPU.  Differentiable in
+``z`` (the transpose is a scatter-add, i.e. ``grad_z = Q^T grad_w``,
+exactly the paper's ``∇_s L = (∇_w L ⊙ Q)`` chain).
+
+Layout (QSpec docstring): rows live in a padded per-block space of
+``shard_count`` x ``m_pad_loc``; valid rows map to the tensor flattened
+with ``major_axis`` moved to the front (sharding-major order).  All
+functions here compute globally — the distributed equivalent is
+``kernels.qz_sharded``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .qspec import QSpec, padded_row_valid, padded_row_window, row_indices, row_values
+
+
+def _w_padded(spec: QSpec, z):
+    """All padded rows: w_pad (m_pad,) f32."""
+    rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
+    win = padded_row_window(spec, rp.astype(jnp.int32))
+    idx = row_indices(spec, rp)  # (m_pad, d) in-window
+    vals = row_values(spec, rp, dtype=jnp.float32)
+    gidx = win[:, None] * spec.window + idx
+    zg = jnp.take(z.astype(jnp.float32), gidx, axis=0)
+    return jnp.sum(vals * zg, axis=-1)
+
+
+def _select_valid(spec: QSpec, w_pad):
+    """(m_pad,) -> (m,) in moved (sharding-major) flat order."""
+    return w_pad.reshape(spec.shard_count, spec.m_pad_loc)[
+        :, : spec.m_blk
+    ].reshape(-1)
+
+
+def _insert_padding(spec: QSpec, flat_moved):
+    """(m,) moved order -> (m_pad,) with per-block padding zeros."""
+    blocks = flat_moved.reshape(spec.shard_count, spec.m_blk)
+    return jnp.pad(
+        blocks, ((0, 0), (0, spec.m_pad_loc - spec.m_blk))
+    ).reshape(-1)
+
+
+def _unmove(spec: QSpec, flat_moved):
+    w = flat_moved.reshape(spec.moved_shape)
+    return jnp.moveaxis(w, 0, spec.major_axis)
+
+
+def _move(spec: QSpec, w):
+    return jnp.moveaxis(w, spec.major_axis, 0).reshape(-1)
+
+
+def reconstruct_ref(spec: QSpec, z, dtype=None, row_sharding=None):
+    """w = Q z for one tensor. ``z``: (n,) -> weights with spec.shape."""
+    del row_sharding  # the ref path computes globally
+    if z.shape != (spec.n,):
+        raise ValueError(f"z has shape {z.shape}, spec expects ({spec.n},)")
+    dtype = dtype or z.dtype
+    w = _select_valid(spec, _w_padded(spec, z))
+    return _unmove(spec, w).astype(dtype)
+
+
+def grad_z_ref(spec: QSpec, grad_w, row_sharding=None):
+    """Q^T grad_w — the reconstruction transpose. Returns (n,) f32."""
+    del row_sharding
+    g = _insert_padding(spec, _move(spec, grad_w.astype(jnp.float32)))
+    rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
+    win = padded_row_window(spec, rp.astype(jnp.int32))
+    idx = row_indices(spec, rp)
+    vals = row_values(spec, rp)
+    gidx = (win[:, None] * spec.window + idx).reshape(-1)
+    out = jnp.zeros((spec.n,), jnp.float32)
+    return out.at[gidx].add((vals * g[:, None]).reshape(-1))
+
+
+def materialize_q(spec: QSpec):
+    """Dense (m, n) Q in NATURAL (spec.shape row-major) order —
+    tests/small-scale theory checks ONLY."""
+    rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
+    win = padded_row_window(spec, rp.astype(jnp.int32))
+    idx = row_indices(spec, rp)
+    vals = row_values(spec, rp)
+    gidx = win[:, None] * spec.window + idx
+    q_pad = jnp.zeros((spec.m_pad, spec.n), jnp.float32)
+    q_pad = q_pad.at[jnp.arange(spec.m_pad)[:, None], gidx].add(vals)
+    q_moved = q_pad.reshape(spec.shard_count, spec.m_pad_loc, spec.n)[
+        :, : spec.m_blk
+    ].reshape(spec.m, spec.n)
+    # moved flat order -> natural order rows
+    q = q_moved.reshape(*spec.moved_shape, spec.n)
+    q = jnp.moveaxis(q, 0, spec.major_axis)
+    return q.reshape(spec.m, spec.n)

@@ -1,0 +1,52 @@
+"""Training-by-sampling primitives (paper §1.3).
+
+Scores ``s`` live in R^n; probabilities ``p = f(s)`` with the clipped
+ReLU ``f(x) = min(max(x, 0), 1)``; masks ``z ~ Bern(p)`` are resampled
+every forward pass.  Gradients use the straight-through estimator: the
+backward pass treats ``z`` as ``p``, and the clip zeroes coordinates
+outside (0, 1) — exactly the paper's
+``∇_s L = (∇_w L ⊙ Q) ⊙ 1_{0<p<1}``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_probs(s):
+    """p = f(s), the ReLU clipped at 1. Gradient is 1_{0<=s<=1}."""
+    return jnp.clip(s, 0.0, 1.0)
+
+
+def sample_mask(p, key):
+    """z ~ Bern(p), float32 in {0,1}. Not differentiable."""
+    u = jax.random.uniform(key, p.shape, dtype=jnp.float32)
+    return (u <= p).astype(jnp.float32)
+
+
+def sample_mask_st(p, key):
+    """Straight-through Bernoulli: forward z, backward identity in p."""
+    z = sample_mask(p, key)
+    return p + jax.lax.stop_gradient(z - p)
+
+
+def expected_mask(p, key=None):
+    """ContinuousModel variant: use p itself (no sampling)."""
+    del key
+    return p
+
+
+def discretize_mask(p):
+    """Round-to-nearest mask (paper App. A 'discretized network')."""
+    return (p >= 0.5).astype(jnp.float32)
+
+
+def init_scores(key, n, *, dist: str = "uniform", beta_a: float = 1.0,
+                beta_b: float = 1.0):
+    """p(0) ~ U(0,1)^n by default (paper); beta(a,b) for App. A sweeps."""
+    if dist == "uniform":
+        return jax.random.uniform(key, (n,), dtype=jnp.float32)
+    if dist == "beta":
+        return jax.random.beta(key, beta_a, beta_b, (n,), dtype=jnp.float32)
+    raise ValueError(f"unknown init dist {dist!r}")

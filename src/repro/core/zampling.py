@@ -1,0 +1,258 @@
+"""Zampling as a first-class reparametrization over model param trees.
+
+Given any model's parameter template (a pytree of arrays or
+ShapeDtypeStructs), Zampling replaces each large leaf with a QSpec and a
+trainable score vector ``s`` (n floats, n = m/compression).  The
+trainable state of the whole model is the collection of score vectors
+plus the small dense leaves (norm scales, biases, ...) that are not
+worth reparametrizing — the paper applies Q to the weight matrices.
+
+Pipeline per step (training-by-sampling):
+    p = clip(s)                         # f(x), §1.3
+    z ~ Bern(p)  (straight-through)     # fresh every step
+    w = Q z      (materialization-free) # kernels/ops.py dispatch
+    loss = model.apply(w, batch); grad flows w -> z -> s
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .qspec import QSpec, make_qspec
+from .sampling import clip_probs, discretize_mask, init_scores, sample_mask, sample_mask_st
+
+PathLeaf = Tuple[str, Any]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+@dataclass(frozen=True)
+class ZamplingConfig:
+    """Reparametrization hyper-parameters (paper notation in brackets)."""
+
+    compression: float = 32.0  # m/n
+    d: int = 8  # non-zeros per row of Q
+    window: int = 512  # TPU adaptation: z-window size
+    seed: int = 0  # shared server/client seed for Q
+    min_size: int = 1024  # leaves smaller than this stay dense
+    mode: str = "sample"  # sample | continuous | discretize
+    chunks: int = 1  # reconstruction row-chunking (perf knob)
+    shard_align: int = 1  # round num_windows to this (mesh model size)
+
+
+@dataclass(frozen=True)
+class ZamplingSpecs:
+    """Static spec set for one model. Not a pytree — closure constant."""
+
+    specs: Dict[str, QSpec]
+    dense_paths: Tuple[str, ...]
+    template: Any  # pytree of ShapeDtypeStruct (full model params)
+    config: ZamplingConfig
+
+    @property
+    def m_total(self) -> int:
+        return sum(s.m for s in self.specs.values())
+
+    @property
+    def n_total(self) -> int:
+        return sum(s.n for s in self.specs.values())
+
+    @property
+    def dense_total(self) -> int:
+        leaves = {p: l for p, l in _flatten(self.template)}
+        return sum(int(jnp.size(leaves[p])) if hasattr(leaves[p], "size") else 0
+                   for p in self.dense_paths)
+
+    @property
+    def compression(self) -> float:
+        return self.m_total / max(self.n_total, 1)
+
+    def comm_bits_per_round(self, packed: bool = True) -> Dict[str, int]:
+        """Analytic communication accounting (paper Table 1)."""
+        n, m = self.n_total, self.m_total
+        return {
+            "naive_client_up": 32 * m,
+            "client_up": n if packed else 8 * n,
+            "server_down": 32 * n,
+            "naive_server_down": 32 * m,
+        }
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(p), l) for p, l in flat]
+
+
+def default_fan_in(path: str, shape) -> int:
+    """Fan-in of the target neuron for He-style sigma (Lemma 2.1).
+
+    Convention: weights are stored (..., in, out) — fan-in is the
+    product of all-but-last dims.  Embedding tables ('embed' in path)
+    use the model dim instead (their rows are looked up, not summed).
+    """
+    if len(shape) < 2:
+        return max(int(shape[0]) if shape else 1, 1)
+    if "embed" in path.lower():
+        return int(shape[-1])
+    fan = 1
+    for s in shape[:-1]:
+        fan *= int(s)
+    return max(fan, 1)
+
+
+def build_specs(
+    template,
+    config: ZamplingConfig,
+    fan_in_fn: Callable[[str, tuple], int] = default_fan_in,
+    shard_plan_fn: Optional[Callable[[str, tuple], Optional[int]]] = None,
+) -> ZamplingSpecs:
+    """Assign a QSpec to every large leaf of the param template.
+
+    ``shard_plan_fn(path, shape) -> axis | None``: which tensor axis the
+    runtime shards over 'model' — reconstruction then uses the
+    sharding-major layout (shard_count = config.shard_align) so weights
+    come out pre-sharded (see QSpec docstring).
+    """
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(jnp.shape(l), jnp.result_type(l)), template
+    )
+    specs: Dict[str, QSpec] = {}
+    dense = []
+    for tid, (path, leaf) in enumerate(_flatten(template)):
+        m = 1
+        for s in leaf.shape:
+            m *= int(s)
+        if len(leaf.shape) >= 2 and m >= config.min_size:
+            axis = shard_plan_fn(path, leaf.shape) if shard_plan_fn else None
+            specs[path] = make_qspec(
+                tid,
+                leaf.shape,
+                fan_in_fn(path, leaf.shape),
+                compression=config.compression,
+                d=config.d,
+                window=config.window,
+                seed=config.seed,
+                align=config.shard_align,
+                major_axis=0 if axis is None else axis,
+                shard_count=1 if axis is None else config.shard_align,
+            )
+        else:
+            dense.append(path)
+    return ZamplingSpecs(
+        specs=specs, dense_paths=tuple(dense), template=template, config=config
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trainable state
+# ---------------------------------------------------------------------------
+
+def init_state(key, zspecs: ZamplingSpecs, dense_init=None) -> Dict[str, Any]:
+    """{'scores': {path: f32[n]}, 'dense': {path: array}}.
+
+    ``dense_init``: optional pytree of actual params to take dense leaves
+    from (e.g. a real model init); falls back to ones/zeros heuristics.
+    """
+    scores = {}
+    for path, spec in zspecs.specs.items():
+        key, sub = jax.random.split(key)
+        scores[path] = init_scores(sub, spec.n)
+    dense = {}
+    dense_leaves = dict(_flatten(dense_init)) if dense_init is not None else {}
+    tmpl = dict(_flatten(zspecs.template))
+    for path in zspecs.dense_paths:
+        if path in dense_leaves:
+            dense[path] = dense_leaves[path]
+        else:
+            leaf = tmpl[path]
+            init = jnp.ones if ("scale" in path or "norm" in path.lower()) else jnp.zeros
+            dense[path] = init(leaf.shape, leaf.dtype)
+    return {"scores": scores, "dense": dense}
+
+
+def state_spec(zspecs: ZamplingSpecs):
+    """ShapeDtypeStructs of the trainable state (for dry-run lowering)."""
+    scores = {
+        p: jax.ShapeDtypeStruct((s.n,), jnp.float32)
+        for p, s in zspecs.specs.items()
+    }
+    tmpl = dict(_flatten(zspecs.template))
+    dense = {
+        p: jax.ShapeDtypeStruct(tmpl[p].shape, tmpl[p].dtype)
+        for p in zspecs.dense_paths
+    }
+    return {"scores": scores, "dense": dense}
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def _mask(p, key, mode: str):
+    if mode == "sample":
+        return sample_mask_st(p, key)
+    if mode == "continuous":
+        return p
+    if mode == "discretize":
+        return discretize_mask(p)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def sample_masks(zspecs: ZamplingSpecs, state, key, mode: Optional[str] = None):
+    """{path: z} straight-through masks, one fresh draw per tensor."""
+    mode = mode or zspecs.config.mode
+    masks = {}
+    for path, spec in zspecs.specs.items():
+        p = clip_probs(state["scores"][path])
+        masks[path] = _mask(p, jax.random.fold_in(key, spec.tensor_id), mode)
+    return masks
+
+
+def weights_from_masks(zspecs: ZamplingSpecs, masks, state,
+                       constraints: Optional[Dict[str, Any]] = None,
+                       row_sharding=None):
+    """Reconstruct the full model param tree from masks + dense leaves.
+
+    ``constraints``: optional {path: NamedSharding} applied to each
+    reconstructed tensor (GSPMD anchor for the distributed runtime).
+    ``row_sharding``: optional NamedSharding for the (num_windows,
+    rows_per_window) reconstruction row space (shards the O(m d)
+    temporaries over 'model').
+    """
+    from ..kernels import ops  # late import: kernels layer sits above core
+
+    tmpl = dict(_flatten(zspecs.template))
+    leaves = {}
+    for path, spec in zspecs.specs.items():
+        w = ops.reconstruct(
+            spec, masks[path], dtype=tmpl[path].dtype,
+            chunks=zspecs.config.chunks, row_sharding=row_sharding,
+        )
+        if constraints is not None and path in constraints:
+            w = jax.lax.with_sharding_constraint(w, constraints[path])
+        leaves[path] = w
+    for path in zspecs.dense_paths:
+        leaves[path] = state["dense"][path]
+    return unflatten_like(zspecs.template, leaves)
+
+
+def sample_weights(zspecs: ZamplingSpecs, state, key,
+                   mode: Optional[str] = None,
+                   constraints: Optional[Dict[str, Any]] = None,
+                   row_sharding=None):
+    """One fresh sampled network: params pytree matching the template."""
+    masks = sample_masks(zspecs, state, key, mode)
+    return weights_from_masks(zspecs, masks, state, constraints=constraints,
+                              row_sharding=row_sharding)
+
+
+def unflatten_like(template, leaves: Dict[str, Any]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    ordered = [leaves[_path_str(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, ordered)

@@ -1,0 +1,78 @@
+"""Convex-random-geometry utilities (paper §2).
+
+Small, exact implementations of the paper's theory quantities, used by
+the property tests and the theory benchmark:
+
+ - Lemma 2.2: E[#nonzero entries of w = Q z] = m (1 - 2^{-d})
+ - Lemma 2.3: empty-column probability / ~ e^{-d} proportion
+ - Prop. 2.4: max_p E|Q_i p| = Theta(sqrt(d / fan_in))
+ - Prop. 2.5: E[vol_n(Z_Q)] (computed in log space — it under/overflows
+   wildly in linear space even for n ~ 50)
+ - Def. 2.2 / Prop 2.6: tau-hypercube dimension and the Jensen bound.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def expected_nonzero_weights(m: int, d: int) -> float:
+    """Lemma 2.2 (at p ~ U(0,1): P(all d mask bits zero) = 2^-d)."""
+    return m * (1.0 - 0.5 ** d)
+
+
+def empty_column_fraction(d: int) -> float:
+    """Lemma 2.3 limit: fraction of all-zero columns for large m = n."""
+    return math.exp(-d)
+
+
+def expected_empty_columns(m: int, n: int, d: int) -> float:
+    """E[#empty cols] = n (1 - d/n)^m (App. C)."""
+    return n * (1.0 - d / n) ** m
+
+
+def max_row_magnitude(d: int, fan_in: int) -> float:
+    """Prop. 2.4 upper bound d * sigma * sqrt(2/pi) with sigma=sqrt(6/(d f))."""
+    sigma = math.sqrt(6.0 / (d * fan_in))
+    return d * sigma * math.sqrt(2.0 / math.pi)
+
+
+def log_expected_zonotope_volume(fan_ins, d: int) -> float:
+    """Prop. 2.5 in log space.
+
+    log E[vol_n(Z_Q)] = log n! + (n/2) log(3/d) - log Gamma(1 + n/2)
+                        - (1/2) sum_i log fan_in_i
+    """
+    n = len(fan_ins)
+    return (
+        math.lgamma(n + 1)
+        + 0.5 * n * math.log(3.0 / d)
+        - math.lgamma(1.0 + n / 2.0)
+        - 0.5 * float(sum(math.log(f) for f in fan_ins))
+    )
+
+
+def tau_hypercube_dim(p, tau: float):
+    """dim(C_tau) = #{j : tau <= p_j <= 1 - tau} (Def. 2.2)."""
+    p = jnp.asarray(p)
+    return int(jnp.sum((p >= tau) & (p <= 1.0 - tau)))
+
+
+def perturb_nontrivial(p, key, tau: float, scale: float = 1.0):
+    """Gaussian impulse on the non-trivial coordinates (paper §3.3).
+
+    tau = 0.5 perturbs ALL coordinates — the paper's Table 4 reads
+    "even when tau = 0.5 (and therefore all values p_j are perturbed)",
+    i.e. the degenerate single-point C_0.5 is interpreted as the
+    everything-perturbed stress test.
+    """
+    import jax
+
+    if tau >= 0.5:
+        mask = jnp.ones_like(p)
+    else:
+        mask = ((p >= tau) & (p <= 1.0 - tau)).astype(jnp.float32)
+    eps = jax.random.normal(key, p.shape, dtype=jnp.float32) * scale
+    return p + eps * mask, eps * mask

@@ -1,0 +1,7 @@
+from .synthetic import SyntheticClassification, lm_token_batches, make_teacher_dataset
+from .federated_split import iid_client_split, client_batch_stream
+
+__all__ = [
+    "SyntheticClassification", "lm_token_batches", "make_teacher_dataset",
+    "iid_client_split", "client_batch_stream",
+]

@@ -1,0 +1,13 @@
+from .paper import (
+    comm_savings_table,
+    run_federated,
+    run_integrality,
+    run_local_compression,
+    run_sensitivity,
+    run_zhou_comparison,
+)
+
+__all__ = [
+    "comm_savings_table", "run_federated", "run_integrality",
+    "run_local_compression", "run_sensitivity", "run_zhou_comparison",
+]

@@ -1,0 +1,303 @@
+"""Faithful reproduction of the paper's experiments (§3, App. A/B).
+
+MNIST is unavailable offline; the synthetic teacher-student task
+(784 -> 10, DESIGN.md §6) stands in.  Absolute accuracies therefore
+differ from the paper's MNIST numbers; the claims validated are the
+paper's *relative* statements — see EXPERIMENTS.md for the mapping.
+
+Every function returns a list of row-dicts (benchmark CSV / markdown).
+``quick=True`` shrinks grids/steps for the CI-scale benchmark run; the
+full grids match the paper (5 seeds, d in {1,5,10,50,100}, m/n = 2^i).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    FederatedConfig,
+    ZamplingConfig,
+    build_specs,
+    federated_round,
+    init_state,
+    sample_weights,
+)
+from ..core.zonotope import perturb_nontrivial, tau_hypercube_dim
+from ..data import iid_client_split, make_teacher_dataset, client_batch_stream
+from ..models.mlp import (
+    MNISTFC_DIMS,
+    SMALL_DIMS,
+    init_mlp_params,
+    mlp_accuracy,
+    mlp_loss,
+    param_count,
+)
+from ..optim import adam
+from ..optim.optimizers import apply_updates
+from ..train import LocalTrainConfig, evaluate, train_local_zampling
+
+_DS = {}
+
+
+def _dataset(seed=0):
+    if seed not in _DS:
+        _DS[seed] = make_teacher_dataset(n_train=8000, n_test=1500, seed=seed)
+    return _DS[seed]
+
+
+def _setup(dims, compression, d, seed, beta: Optional[tuple] = None):
+    template = init_mlp_params(jax.random.PRNGKey(seed), dims)
+    zspecs = build_specs(
+        template,
+        ZamplingConfig(compression=compression, d=d, window=128, seed=seed,
+                       min_size=128),
+    )
+    state = init_state(jax.random.PRNGKey(seed + 1), zspecs,
+                       dense_init=template)
+    if beta is not None:
+        from ..core.sampling import init_scores
+
+        state["scores"] = {
+            p: init_scores(jax.random.fold_in(jax.random.PRNGKey(seed + 2),
+                                              i), s.shape[0],
+                           dist="beta", beta_a=beta[0], beta_b=beta[1])
+            for i, (p, s) in enumerate(state["scores"].items())
+        }
+    return zspecs, state
+
+
+def _train(zspecs, state, ds, steps, lr, mode="sample", seed=0):
+    batches = (
+        {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+        for x, y in ds.batches(128, seed=seed)
+    )
+    cfg = LocalTrainConfig(steps=steps, lr=lr, mode=mode,
+                           eval_every=10**9, seed=seed)
+    state, hist = train_local_zampling(zspecs, state, mlp_loss, batches, cfg)
+    return state, hist
+
+
+def _acc_fn(ds):
+    tb = {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}
+    return jax.jit(lambda p: mlp_accuracy(p, tb))
+
+
+# ---------------------------------------------------------------------------
+# §3.1 / Table 2 / Fig 3 — compression-accuracy tradeoff across d
+# ---------------------------------------------------------------------------
+
+def run_local_compression(quick: bool = True) -> List[Dict]:
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    ds_list = [1, 5, 10] if quick else [1, 5, 10, 50, 100]
+    comps = [1, 4, 32] if quick else [2**i for i in range(11)]
+    seeds = [0] if quick else [0, 1, 2, 3, 4]
+    steps = 800 if quick else 4000
+    rows = []
+    for d in ds_list:
+        for c in comps:
+            accs_sampled, accs_expected = [], []
+            for seed in seeds:
+                t0 = time.time()
+                zspecs, state = _setup(SMALL_DIMS, c, d, seed)
+                state, _ = _train(zspecs, state, ds, steps, 1e-2, seed=seed)
+                ms, _ = evaluate(zspecs, state, acc, jax.random.PRNGKey(9),
+                                 n_samples=10 if quick else 100)
+                me, _ = evaluate(zspecs, state, acc, jax.random.PRNGKey(9),
+                                 mode="continuous")
+                accs_sampled.append(ms)
+                accs_expected.append(me)
+            rows.append({
+                "bench": "table2_compression",
+                "d": d, "compression": c,
+                "sampled_acc": float(np.mean(accs_sampled)),
+                "sampled_std": float(np.std(accs_sampled)),
+                "expected_acc": float(np.mean(accs_expected)),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 1 — communication savings (analytic, exact)
+# ---------------------------------------------------------------------------
+
+def comm_savings_table() -> List[Dict]:
+    m = param_count(MNISTFC_DIMS)
+    rows = []
+    rows.append({
+        "bench": "table1_comm", "method": "isik23_fedpm",
+        "client_savings": 33.69, "server_savings": 1.05,
+        "note": "paper-reported (*bit-rate 0.95 arithmetic coding)",
+    })
+    for comp in (8, 32):
+        n = int(np.ceil(m / comp))
+        rows.append({
+            "bench": "table1_comm",
+            "method": f"zampling m/n={comp}",
+            "client_savings": 32.0 * m / n,  # n bits vs 32m bits
+            "server_savings": float(m) / n,  # 32n vs 32m
+            "note": f"m={m}, n={n} (MNISTFC)",
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §3.2 / Fig 4 — Federated Zampling, m/n in {1, 8, 32}
+# ---------------------------------------------------------------------------
+
+def run_federated(quick: bool = True) -> List[Dict]:
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    comps = [1, 8, 32]
+    K = 10
+    E = 40 if quick else 100
+    rounds = 30 if quick else 100
+    dims = SMALL_DIMS if quick else MNISTFC_DIMS
+    rows = []
+    for comp in comps:
+        zspecs, state = _setup(dims, comp, d=10, seed=1)
+        clients = iid_client_split(ds, K, seed=0)
+        stream = client_batch_stream(clients, 64, E, seed=0)
+        cfg = FederatedConfig(num_clients=K, local_steps=E, local_lr=0.5)
+
+        @jax.jit
+        def round_fn(state, batch, key):
+            return federated_round(zspecs, state, mlp_loss, batch, key, cfg)
+
+        key = jax.random.PRNGKey(0)
+        curve = []
+        for r in range(rounds):
+            xs, ys = next(stream)
+            key, sub = jax.random.split(key)
+            state, met = round_fn(
+                state, {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}, sub
+            )
+            if (r + 1) % max(rounds // 5, 1) == 0:
+                ms, _ = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                                 n_samples=10)
+                curve.append(round(ms, 4))
+        ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                            n_samples=10 if quick else 100)
+        rows.append({
+            "bench": "fig4_federated", "compression": comp,
+            "final_sampled_acc": ms, "sampled_std": mstd,
+            "curve": curve,
+            "client_savings": 32.0 * zspecs.compression,
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §3.3 / Table 4 — sensitivity: sampled vs regular training
+# ---------------------------------------------------------------------------
+
+def run_sensitivity(quick: bool = True) -> List[Dict]:
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    steps = 800 if quick else 4000
+    taus = [0.01, 0.2, 0.5]
+    n_pert = 5 if quick else 10
+    rows = []
+    for mode, label in (("sample", "sampled"), ("continuous", "regular")):
+        zspecs, state = _setup(SMALL_DIMS, 2.0, 5, seed=0)
+        state, _ = _train(zspecs, state, ds, steps, 1e-2, mode=mode)
+        base_params = sample_weights(zspecs, state, jax.random.PRNGKey(3),
+                                     mode="continuous")
+        base = float(acc(base_params))
+        for tau in taus:
+            sens, devs, accs = [], [], []
+            for i in range(n_pert):
+                key = jax.random.PRNGKey(100 + i)
+                pert_scores, eps_norms = {}, 0.0
+                for path, s in state["scores"].items():
+                    p2, eps = perturb_nontrivial(
+                        s, jax.random.fold_in(key, hash(path) % 2**31), tau
+                    )
+                    pert_scores[path] = p2
+                    eps_norms += float(jnp.sum(eps**2))
+                eps_norm = np.sqrt(eps_norms)
+                pstate = {"scores": pert_scores, "dense": state["dense"]}
+                params = sample_weights(zspecs, pstate, jax.random.PRNGKey(4),
+                                        mode="continuous")
+                a = float(acc(params))
+                accs.append(a)
+                sens.append(abs(base - a) / max(base, 1e-9))
+                devs.append(abs(base - a) / max(eps_norm, 1e-9))
+            rows.append({
+                "bench": "table4_sensitivity", "training": label, "tau": tau,
+                "base_acc": base,
+                "avg_acc": float(np.mean(accs)),
+                "avg_sensitivity": float(np.mean(sens)),
+                "avg_deviation": float(np.mean(devs)),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# App. A / Fig 5 — integrality gap vs initialisation
+# ---------------------------------------------------------------------------
+
+def run_integrality(quick: bool = True) -> List[Dict]:
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    steps = 800 if quick else 3000
+    betas = [(0.1, 0.1), (1.0, 1.0)] if quick else [
+        (0.05, 0.05), (0.1, 0.1), (0.5, 0.5), (1.0, 1.0), (2.0, 2.0)
+    ]
+    rows = []
+    for beta in betas:
+        # ContinuousModel: train w = Q p directly, NO sampling (App. A)
+        zspecs, state = _setup(SMALL_DIMS, 2.0, 5, seed=0, beta=beta)
+        state, _ = _train(zspecs, state, ds, steps, 1e-2, mode="continuous")
+        exp_acc, _ = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                              mode="continuous")
+        samp_acc, samp_std = evaluate(zspecs, state, acc,
+                                      jax.random.PRNGKey(5),
+                                      n_samples=10 if quick else 100)
+        disc_acc, _ = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                               mode="discretize")
+        rows.append({
+            "bench": "fig5_integrality", "beta": beta,
+            "expected_acc": exp_acc, "sampled_acc": samp_acc,
+            "sampled_std": samp_std, "discretized_acc": disc_acc,
+            "integrality_gap": exp_acc - samp_acc,
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# App. B.1 / Fig 6 — comparison with Zhou et al. (d=1, n=m supermask)
+# ---------------------------------------------------------------------------
+
+def run_zhou_comparison(quick: bool = True) -> List[Dict]:
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    steps = 800 if quick else 4000
+    dims = SMALL_DIMS if quick else MNISTFC_DIMS
+    configs = [("zhou_d1_nm", 1.0, 1)] + [
+        (f"zampling_d{d}", 1.0, d) for d in ([4, 16] if quick else
+                                             [2, 4, 16, 256])
+    ]
+    rows = []
+    for label, comp, d in configs:
+        zspecs, state = _setup(dims, comp, d, seed=0)
+        state, _ = _train(zspecs, state, ds, steps, 1e-2)
+        ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                            n_samples=10 if quick else 100)
+        # best sampled mask (paper reports best of 100)
+        best = max(
+            float(acc(sample_weights(zspecs, state,
+                                     jax.random.fold_in(
+                                         jax.random.PRNGKey(6), i))))
+            for i in range(10 if quick else 100)
+        )
+        rows.append({
+            "bench": "fig6_zhou", "method": label, "d": d,
+            "mean_sampled_acc": ms, "std": mstd, "best_mask_acc": best,
+        })
+    return rows

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the Zampling hot spots.
+
+``qz_reconstruct`` — materialization-free ``w = Q z`` (fwd + bwd),
+validated in interpret mode against ``ref.py``.  ``ops`` holds the jit'd
+public wrappers with the custom VJP and impl dispatch.
+"""
+
+from . import ops, qz_reconstruct, ref
+
+__all__ = ["ops", "qz_reconstruct", "ref"]

@@ -1,0 +1,109 @@
+"""jit'd public wrappers around the reconstruction kernels.
+
+``reconstruct(spec, z)`` is THE hot op of the paper's technique: every
+training/serving step turns the sampled mask ``z`` back into weights.
+Dispatch:
+
+ - impl='ref'     pure-jnp oracle (default on CPU)
+ - impl='pallas'  the Pallas TPU kernel (interpret=True on CPU;
+                  single-block layout, shard_count == 1)
+ - distributed    when the spec carries shard_count > 1 and a mesh is
+                  active, the manually-partitioned shard_map op emits
+                  the tensor directly in consumer sharding
+                  (kernels.qz_sharded — zero collectives)
+ - chunks>1       lax.map over row-chunks of the ref path (bounds the
+                  O(m·d) temporaries on a single host)
+
+A ``jax.custom_vjp`` ties forward and backward together so both
+directions use the same impl and the straight-through chain
+``grad_s = Q^T grad_w ⊙ 1_{0<p<1}`` (paper §1.3) falls out of autodiff.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qspec import QSpec, padded_row_window, row_indices, row_values
+from ..core.reconstruct import _select_valid, _unmove, grad_z_ref, reconstruct_ref
+from . import qz_reconstruct as _pk
+
+_DEFAULT_IMPL = "ref"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("ref", "pallas")
+    _DEFAULT_IMPL = impl
+
+
+def _ref_chunked(spec: QSpec, z, chunks: int):
+    """Row-chunked padded rows: temporaries bounded to m_pad/chunks."""
+    rpc = -(-spec.m_pad // chunks) // 8 * 8 or spec.m_pad  # multiple of 8
+    chunks = -(-spec.m_pad // rpc)
+    zf = z.astype(jnp.float32)
+
+    def one(c):
+        rp = c * rpc + jnp.arange(rpc, dtype=jnp.int32)
+        rp = jnp.minimum(rp, spec.m_pad - 1)
+        win = padded_row_window(spec, rp)
+        idx = row_indices(spec, rp.astype(jnp.uint32))
+        vals = row_values(spec, rp.astype(jnp.uint32), dtype=jnp.float32)
+        gidx = win[:, None] * spec.window + idx
+        return jnp.sum(vals * jnp.take(zf, gidx, axis=0), axis=-1)
+
+    w_pad = jax.lax.map(one, jnp.arange(chunks)).reshape(-1)[: spec.m_pad]
+    return _unmove(spec, _select_valid(spec, w_pad))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2, 3, 4))
+def _reconstruct(spec: QSpec, z, impl: str, chunks: int, model_size):
+    if model_size is not None and spec.shard_count > 1:
+        from .qz_sharded import sharded_reconstruct
+
+        return sharded_reconstruct(spec, z, model_size)
+    if impl == "pallas":
+        assert spec.shard_count == 1, "pallas path is single-block layout"
+        return _pk.qz_reconstruct_fwd(spec, z).reshape(spec.shape)
+    if chunks > 1:
+        return _ref_chunked(spec, z, chunks)
+    return reconstruct_ref(spec, z, dtype=jnp.float32)
+
+
+def _fwd(spec, z, impl, chunks, model_size):
+    return _reconstruct(spec, z, impl, chunks, model_size), None
+
+
+def _bwd(spec, impl, chunks, model_size, _res, g):
+    if model_size is not None and spec.shard_count > 1:
+        from .qz_sharded import sharded_grad_z
+
+        return (sharded_grad_z(spec, g.astype(jnp.float32), model_size),)
+    if impl == "pallas":
+        return (_pk.qz_reconstruct_bwd(spec, g.reshape(-1)),)
+    return (grad_z_ref(spec, g),)
+
+
+_reconstruct.defvjp(_fwd, _bwd)
+
+
+def reconstruct(spec: QSpec, z, *, dtype=jnp.float32, chunks: int = 1,
+                impl: Optional[str] = None, model_size: Optional[int] = None,
+                row_sharding=None):
+    """w = Q z, returned with ``spec.shape`` and ``dtype``.
+
+    ``model_size``: size of the 'model' mesh axis — activates the
+    distributed op when the spec was built with shard_count > 1.
+    (``row_sharding`` kept for API compat; its mesh provides model_size.)
+    """
+    if model_size is None and row_sharding is not None:
+        shape = dict(zip(row_sharding.mesh.axis_names,
+                         row_sharding.mesh.devices.shape))
+        model_size = shape.get("model")
+    impl = impl or _DEFAULT_IMPL
+    w = _reconstruct(spec, z.astype(jnp.float32), impl, int(chunks),
+                     model_size)
+    return w.astype(dtype)

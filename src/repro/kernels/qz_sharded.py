@@ -1,0 +1,123 @@
+"""Distribution-aware reconstruction: shard_map over the 'model' axis.
+
+GSPMD cannot partition the scatter in ``grad_z = Q^T grad_w``, and a
+flat-row-sharded weight must be RESHARDED to its consumer layout — an
+all-gather of the full tensor through a replicated f32 intermediate
+(measured 14 GB/device/tensor on qwen3-14b).  Both problems disappear
+with the sharding-major layout (QSpec.major_axis/shard_count):
+
+ - shard k owns rows [k·m_pad_loc, (k+1)·m_pad_loc) which read ONLY its
+   own ``nw_loc`` z windows — the gather/scatter is purely local;
+ - those rows ARE the k-th block of the tensor's sharded axis, so the
+   local reshape+moveaxis emits the weight block in consumer layout and
+   ``out_specs`` reassembles the global tensor with ZERO collectives.
+
+The shard_map is entered without an explicit mesh so it composes with
+the (partially-manual) context mesh of the federated round.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.qspec import QSpec, row_indices, row_values
+
+AXIS = "model"
+
+
+TARGET_CHUNK_BYTES = 128 << 20  # bound the (rows, d) temporaries
+
+
+def _num_chunks(spec: QSpec) -> int:
+    per_row = spec.d * 4 * 3  # idx + vals + gathered z, f32/i32
+    return max(1, min(spec.m_pad_loc,
+                      (spec.m_pad_loc * per_row) // TARGET_CHUNK_BYTES))
+
+
+def _chunk_rows(spec: QSpec, c, rpc):
+    """Gather indices + values for rows [c*rpc, (c+1)*rpc) of this shard."""
+    sid = jax.lax.axis_index(AXIS)
+    loc = c * rpc + jnp.arange(rpc, dtype=jnp.int32)
+    loc = jnp.minimum(loc, spec.m_pad_loc - 1)  # clamp tail overrun
+    rp = (sid * spec.m_pad_loc + loc).astype(jnp.uint32)
+    idx = row_indices(spec, rp)  # (rpc, d) in-window
+    vals = row_values(spec, rp, dtype=jnp.float32)
+    win_loc = jnp.minimum(loc // spec.rows_per_window, spec.nw_loc - 1)
+    gidx = win_loc[:, None] * spec.window + idx  # local z-slice index
+    return gidx, vals
+
+
+def _check(spec: QSpec, ms: int):
+    if spec.shard_count != ms:
+        raise ValueError(
+            f"spec.shard_count={spec.shard_count} != model axis size {ms}; "
+            "build specs with shard_count=model_size"
+        )
+
+
+def _out_spec(spec: QSpec) -> P:
+    dims = [None] * len(spec.shape)
+    dims[spec.major_axis] = AXIS
+    return P(*dims)
+
+
+def sharded_reconstruct(spec: QSpec, z, ms: int):
+    """w = Q z with z sharded P('model'); returns the weight tensor
+    with ``spec.shape``, sharded on its major axis. Zero collectives."""
+    _check(spec, ms)
+    a = spec.major_axis
+    loc_moved = (spec.shape[a] // ms,
+                 *spec.shape[:a], *spec.shape[a + 1:])
+
+    def local(zl):
+        zf = zl.astype(jnp.float32)
+        nc = _num_chunks(spec)
+        rpc = -(-spec.m_pad_loc // nc)
+
+        def one(c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            return jnp.sum(vals * zf[gidx], axis=-1)
+
+        w = jax.lax.map(one, jnp.arange(nc)).reshape(-1)[: spec.m_blk]
+        return jnp.moveaxis(w.reshape(loc_moved), 0, a)
+
+    return jax.shard_map(
+        local, in_specs=P(AXIS), out_specs=_out_spec(spec),
+        axis_names={AXIS}, check_vma=False,
+    )(z.astype(jnp.float32))
+
+
+def sharded_grad_z(spec: QSpec, grad_w, ms: int):
+    """Q^T g; g has spec.shape (any sharding — in_specs reshards to the
+    major axis); returns (n,) f32 sharded P('model'). Zero collectives
+    beyond the input reshard (none when g is already major-sharded)."""
+    _check(spec, ms)
+
+    def local(gl):
+        gm = jnp.moveaxis(gl, spec.major_axis, 0).reshape(-1)  # (m_blk,)
+        g_pad = jnp.pad(gm.astype(jnp.float32),
+                        (0, spec.m_pad_loc - spec.m_blk))
+        nc = _num_chunks(spec)
+        rpc = -(-spec.m_pad_loc // nc)
+        nloc = spec.nw_loc * spec.window
+
+        def step(gz, c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            rows = jnp.minimum(c * rpc + jnp.arange(rpc), spec.m_pad_loc - 1)
+            gc = g_pad[rows]
+            # clamped tail rows repeat row m_pad_loc-1: zero their updates
+            live = (c * rpc + jnp.arange(rpc)) < spec.m_pad_loc
+            upd = (vals * (gc * live.astype(jnp.float32))[:, None]
+                   ).reshape(-1)
+            return gz.at[gidx.reshape(-1)].add(upd), None
+
+        gz, _ = jax.lax.scan(step, jnp.zeros((nloc,), jnp.float32),
+                             jnp.arange(nc))
+        return gz
+
+    return jax.shard_map(
+        local, in_specs=_out_spec(spec), out_specs=P(AXIS),
+        axis_names={AXIS}, check_vma=False,
+    )(grad_w)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracles for the kernels package.
+
+``reconstruct_ref`` / ``grad_z_ref`` are the ground truth for the
+Pallas ``qz_reconstruct`` kernels — every kernel test sweeps
+shapes/dtypes and ``assert_allclose``s against these.
+"""
+
+from ..core.reconstruct import grad_z_ref, materialize_q, reconstruct_ref
+
+__all__ = ["reconstruct_ref", "materialize_q", "grad_z_ref"]

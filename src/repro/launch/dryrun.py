@@ -1,0 +1,376 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, record memory/cost/collective analyses.
+
+This is the proof that the distribution config is coherent without real
+hardware (the two lines above MUST precede any other import — jax locks
+the device count on first init).
+
+Per (arch, shape, mesh, mode):
+ - train_4k    -> one FEDERATED ZAMPLING round (the paper's system):
+                  shard_map manual over the client axes ('pod','data'),
+                  GSPMD over 'model'; E local score-steps; mask psum.
+                  mode='baseline' lowers standard dense-DP training
+                  (fp32 grad all-reduce) for the communication
+                  comparison in EXPERIMENTS.md.
+ - prefill_32k -> forward logits over the full prompt.
+ - decode_32k / long_500k -> serve_step: ONE token against a KV/SSM
+                  cache of seq_len (ring-buffer under SWA).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--mode baseline]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..configs.registry import ARCHS, SHAPES, InputShape, get_arch, get_shape
+from ..core.federated import FederatedConfig, sharded_client_update
+from ..core.zampling import ZamplingConfig, build_specs, state_spec
+from ..launch import sharding as shp
+from ..launch.input_specs import input_specs
+from ..launch.mesh import data_axes, make_production_mesh
+from ..models.model import build_model, loss_fn
+from ..optim import sgd
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device result bytes of every collective op in the
+    post-SPMD HLO. (cost_analysis does not report collectives.)"""
+    out = {k: 0 for k in COLLECTIVES}
+    array_re = re.compile(r"(\w+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m or m.group(3) == "-done":
+            continue
+        kind = m.group(2)
+        lhs_types = m.group(1)
+        nbytes = 0
+        for dt, dims in array_re.findall(lhs_types):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        out[kind] += nbytes
+    return out
+
+
+def _sds(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def zampling_config(cfg: ArchConfig) -> ZamplingConfig:
+    """Paper-default reparametrization for the big archs: m/n=32, d=8."""
+    return ZamplingConfig(compression=32.0, d=8, window=512, seed=0,
+                          min_size=1_000_000, shard_align=16)
+
+
+# ---------------------------------------------------------------------------
+# step builders: return (jitted_fn, example_args_as_SDS)
+# ---------------------------------------------------------------------------
+
+def build_train_zampling(cfg: ArchConfig, shape: InputShape, mesh,
+                         local_steps: int = 1):
+    """One federated round: shard_map over client axes, mask psum."""
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+    def shard_plan(path, shape):
+        spec = shp.param_spec(path, shape, mesh)
+        for i, axis in enumerate(spec):
+            if axis == "model" or (isinstance(axis, tuple)
+                                   and "model" in axis):
+                return i
+        return None
+
+    zspecs = build_specs(params_sds, zampling_config(cfg),
+                         shard_plan_fn=shard_plan)
+    tstate = state_spec(zspecs)
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    # plain PartitionSpecs: resolved against the context (abstract) mesh
+    # inside shard_map — a concrete-mesh NamedSharding trips the
+    # Manual/Auto axis-type check when closed over into scanned bodies
+    constraints = {
+        p: shp.param_spec(p, s.shape, mesh) for p, s in zspecs.specs.items()
+    }
+    fcfg = FederatedConfig(num_clients=dsize, local_steps=local_steps,
+                           local_lr=0.1)
+
+    def mloss(params, batch):
+        return loss_fn(model, params, batch)
+
+    def round_fn(state, batch, key):
+        batches = jax.tree.map(lambda x: x[None], batch)  # E=1 local step
+        return sharded_client_update(
+            zspecs, state, mloss, batches, key, fcfg,
+            axis_names=daxes, constraints=constraints,
+            row_sharding=NamedSharding(mesh, P("model", None)),
+        )
+
+    # ---- shapes & shardings
+    ins = input_specs(cfg, shape)
+    state_shard = jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, shp.param_spec("scores", l.shape, mesh)
+            if l.ndim == 1 else shp.param_spec("dense", l.shape, mesh)
+        ),
+        tstate,
+    )
+    batch_shard = shp.plan_tree(ins, mesh, "input")
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    sm_in_specs = (
+        jax.tree.map(lambda _: P(), tstate),
+        jax.tree.map(
+            lambda l: P(daxes) if (l.shape and l.shape[0] % dsize == 0
+                                   and l.shape[0] >= dsize) else P(),
+            ins,
+        ),
+        P(),
+    )
+    sm_out_specs = (jax.tree.map(lambda _: P(), tstate), {"loss": P()})
+
+    smapped = jax.shard_map(
+        round_fn, mesh=mesh, in_specs=sm_in_specs, out_specs=sm_out_specs,
+        axis_names=set(daxes), check_vma=False,
+    )
+    jf = jax.jit(
+        smapped,
+        in_shardings=(state_shard, batch_shard, NamedSharding(mesh, P())),
+        out_shardings=(state_shard, {"loss": NamedSharding(mesh, P())}),
+        donate_argnums=(0,),
+    )
+    meta = {
+        "zampling": {
+            "m_total": zspecs.m_total, "n_total": zspecs.n_total,
+            "compression": zspecs.compression,
+            "comm_bits": zspecs.comm_bits_per_round(),
+        }
+    }
+    return jf, (tstate, ins, key_sds), meta
+
+
+def build_train_baseline(cfg: ArchConfig, shape: InputShape, mesh):
+    """Standard dense-DP training step (fp32 grad all-reduce baseline)."""
+    model = build_model(cfg)
+    optimizer = sgd(1e-2)
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    param_shard = shp.plan_tree(params_sds, mesh, "param")
+    opt_shard = shp.plan_tree(opt_sds, mesh, "param")
+    ins = input_specs(cfg, shape)
+    batch_shard = shp.plan_tree(ins, mesh, "input")
+
+    def step(params, opt_state, batch):
+        def loss(p):
+            return loss_fn(model, p, batch)
+
+        l, grads = jax.value_and_grad(loss)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params,
+                              updates)
+        return params, opt_state, l
+
+    jf = jax.jit(
+        step,
+        in_shardings=(param_shard, opt_shard, batch_shard),
+        out_shardings=(param_shard, opt_shard, NamedSharding(mesh, P())),
+        donate_argnums=(0, 1),
+    )
+    return jf, (params_sds, opt_sds, ins), {}
+
+
+def build_prefill(cfg: ArchConfig, shape: InputShape, mesh):
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    param_shard = shp.plan_tree(params_sds, mesh, "param")
+    ins = input_specs(cfg, shape)
+    batch_shard = shp.plan_tree(ins, mesh, "input")
+    logits_shard = NamedSharding(
+        mesh, P(data_axes(mesh) if shape.global_batch >= 16 else None, None,
+                "model" if cfg.vocab % 16 == 0 else None)
+    )
+
+    def prefill(params, batch):
+        # realistic prefill product: next-token logits for the LAST
+        # position (returning all-position logits is a 33 GB/device
+        # output at 32k x 256k vocab)
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1:]
+
+    jf = jax.jit(prefill, in_shardings=(param_shard, batch_shard),
+                 out_shardings=logits_shard)
+    return jf, (params_sds, ins), {}
+
+
+def build_decode(cfg: ArchConfig, shape: InputShape, mesh,
+                 window_override=None):
+    model = build_model(cfg, window_override=window_override)
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    param_shard = shp.plan_tree(params_sds, mesh, "param")
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(None, shape.global_batch, shape.seq_len)
+    )
+    cache_shard = jax.tree.map(
+        lambda l: NamedSharding(
+            mesh, shp.cache_spec("cache", l.shape, mesh)
+        ),
+        cache_sds,
+    )
+    ins = input_specs(cfg, shape)
+    batch_shard = shp.plan_tree(ins, mesh, "input")
+    logits_shard = NamedSharding(
+        mesh,
+        P(data_axes(mesh) if shape.global_batch >= 16 else None, None,
+          "model" if cfg.vocab % 16 == 0 else None),
+    )
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+
+    jf = jax.jit(
+        serve_step,
+        in_shardings=(param_shard, cache_shard, batch_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,),  # alias the KV/SSM cache in place
+    )
+    return jf, (params_sds, cache_sds, ins), {}
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mode: str = "zampling", window_override=None,
+               local_steps: int = 1) -> Dict[str, Any]:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    ok, note = cfg.supports_shape(shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": note}
+    if (shape_name == "long_500k" and cfg.family in ("dense", "moe", "hybrid")
+            and cfg.window is None and window_override is None):
+        # documented SWA long-context variant; for the hybrid the SSM
+        # backbone carries the long-range state (Jamba-style)
+        window_override = 4096
+        note = "SWA variant W=4096"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        if mode == "zampling":
+            jf, args, meta = build_train_zampling(cfg, shape, mesh,
+                                                  local_steps=local_steps)
+        else:
+            jf, args, meta = build_train_baseline(cfg, shape, mesh)
+    elif shape.kind == "prefill":
+        jf, args, meta = build_prefill(cfg, shape, mesh)
+    else:
+        jf, args, meta = build_decode(cfg, shape, mesh,
+                                      window_override=window_override)
+    with jax.set_mesh(mesh):
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        colls = collective_bytes(compiled.as_text())
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": mode,
+        "note": note,
+        "skipped": False,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": ca.get("flops", 0.0),
+        "bytes_accessed_per_device": ca.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": colls,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+        },
+        **meta,
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="zampling",
+                    choices=["zampling", "baseline"])
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    jobs = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in SHAPES:
+                jobs.append((a, s))
+    else:
+        jobs.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in jobs:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}_{args.mode}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            res = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                             mode=args.mode, local_steps=args.local_steps)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures += 1
+            res = {"arch": arch, "shape": shape, "error": str(e),
+                   "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2, default=float)
+        status = ("SKIP " + res.get("reason", "") if res.get("skipped")
+                  else "FAIL " + res.get("error", "")[:80]
+                  if "error" in res else
+                  f"ok compile={res['compile_s']}s "
+                  f"flops/dev={res['flops_per_device']:.3g}")
+        print(f"[dryrun] {tag}: {status}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Model inputs per (arch, input-shape): ShapeDtypeStruct stand-ins for
+the dry-run (no allocation) and real random batches for smoke tests.
+
+Modality stubs (DESIGN.md §4): VLM archs get precomputed patch/text
+embeddings (B, S, d_model); audio/enc-dec archs get encoder frame
+embeddings (B, S/4, d_model) — a 4x conv-codec downsampling stand-in —
+plus decoder token ids.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..configs.registry import InputShape
+
+ENC_DOWNSAMPLE = 4
+
+
+def _embed_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = _embed_dtype(cfg)
+    if shape.kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        return batch
+    specs: Dict[str, Any] = {}
+    if cfg.family in ("encdec", "audio"):
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (B, S // ENC_DOWNSAMPLE, cfg.d_model), dt
+        )
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif cfg.embed_stub:  # vlm
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return specs
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0
+               ) -> Dict[str, Any]:
+    """Concrete random batch with the same structure as input_specs."""
+    rng = np.random.RandomState(seed)
+    out = {}
+    for name, sds in input_specs(cfg, shape).items():
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jnp.asarray(
+                rng.randint(0, cfg.vocab, sds.shape), sds.dtype
+            )
+        else:
+            out[name] = jnp.asarray(rng.randn(*sds.shape), sds.dtype)
+    return out

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+Functions, not module constants — importing this module must never
+touch jax device state (smoke tests see 1 CPU device; only dryrun.py
+sets XLA_FLAGS for 512 placeholder devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (1 CPU in CI) as a (data, model) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The client/batch axes: ('pod','data') when multi-pod."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

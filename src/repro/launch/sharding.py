@@ -1,0 +1,146 @@
+"""Sharding planner: path/shape -> PartitionSpec over the production mesh.
+
+Rules (DESIGN.md §5):
+ - batch dims  -> ("pod","data") (replicated when not divisible, e.g.
+   long_500k's batch=1);
+ - vocab/embedding rows, MoE expert axis, d_ff/heads (last or
+   second-to-last dim) -> "model", first divisible dim wins;
+ - score vectors / masks (1-D, window-aligned) -> "model";
+ - KV caches: batch -> data axes, kv-heads -> "model" when divisible
+   (GQA kv<16 falls back to the sequence dim);
+ - everything small/non-divisible -> replicated.
+
+The planner only proposes; every spec is checked for divisibility
+against the actual mesh before use, so one code path serves the 16x16
+single-pod and 2x16x16 multi-pod meshes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _data_size(mesh) -> int:
+    n = 1
+    for a in _data_axes(mesh):
+        n *= _axis_size(mesh, a)
+    return n
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_spec(path: str, shape, mesh) -> P:
+    ms = _axis_size(mesh, "model")
+    ndim = len(shape)
+    dims = [None] * ndim
+    if ndim == 0:
+        return P()
+    pl = path.lower()
+    if ndim == 1:
+        # score/mask vectors are window-aligned; shard when divisible
+        if ("scores" in pl or "mask" in pl) and shape[0] % ms == 0:
+            return P("model")
+        return P()
+    # embedding tables: shard vocab rows
+    if "embed" in pl and shape[-2] % ms == 0:
+        dims[-2] = "model"
+        return P(*dims)
+    # MoE expert stacks (L, E, a, b): prefer expert parallelism
+    if ndim >= 3 and any(t in pl for t in ("gate", "up", "down")) and (
+        "moe" in pl or ndim == 4
+    ):
+        e_dim = ndim - 3
+        if shape[e_dim] % ms == 0:
+            dims[e_dim] = "model"
+            return P(*dims)
+    # Megatron pairing: down-proj and attention-out are ROW-parallel
+    # (shard the contracting/input dim so the column-parallel producer's
+    # sharded activations feed them without an all-gather; the output
+    # psum is the cheap direction).
+    order = ((ndim - 2, ndim - 1)
+             if any(t in pl for t in ("down", "wo")) else
+             (ndim - 1, ndim - 2))
+    for d in order:
+        if shape[d] % ms == 0 and shape[d] >= ms:
+            dims[d] = "model"
+            return P(*dims)
+    return P()
+
+
+def batch_spec(path: str, shape, mesh) -> P:
+    """Model inputs: shard the leading (batch) dim over data axes."""
+    if not shape:
+        return P()
+    dn = _data_size(mesh)
+    dims: list = [None] * len(shape)
+    if shape[0] % dn == 0 and shape[0] >= dn:
+        dims[0] = _data_axes(mesh)
+    return P(*dims)
+
+
+def cache_spec(path: str, shape, mesh) -> P:
+    """KV/SSM caches, stacked (L, B, ...): B -> data, heads/seq -> model."""
+    ndim = len(shape)
+    if ndim < 3:
+        return P()
+    ms = _axis_size(mesh, "model")
+    dn = _data_size(mesh)
+    dims: list = [None] * ndim
+    if shape[1] % dn == 0 and shape[1] >= dn:
+        dims[1] = _data_axes(mesh)
+    # prefer a head-like dim (dim 3 of (L,B,C,KV,hd) / (L,B,H,P,N)),
+    # then head_dim; the seq dim (2) LAST — the decode ring-buffer write
+    # (dynamic-update-slice at a traced slot) forces copies across a
+    # seq-sharded cache.
+    for d in (3, ndim - 1, 2):
+        if 1 < d < ndim and shape[d] % ms == 0 and shape[d] >= ms:
+            dims[d] = "model"
+            break
+    return P(*dims)
+
+
+def plan_tree(tree, mesh, kind: str) -> Any:
+    """Pytree of NamedSharding matching ``tree`` (arrays or SDS)."""
+    rule = {"param": param_spec, "input": batch_spec, "cache": cache_spec}[kind]
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        return NamedSharding(mesh, rule(_path_str(path), shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_map_specs(tree, manual_axes: Tuple[str, ...], batch_dim0: bool):
+    """shard_map in_specs: only the manual axes may appear."""
+
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if batch_dim0 and shape:
+            dn = 1
+            for a in manual_axes:
+                dn *= 1  # divisibility checked by caller
+            if shape[0] >= len(manual_axes):
+                dims = [manual_axes] + [None] * (len(shape) - 1)
+                return P(*dims)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, tree)

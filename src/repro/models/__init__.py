@@ -1,0 +1,3 @@
+from .model import Model, build_model, loss_fn
+
+__all__ = ["Model", "build_model", "loss_fn"]

@@ -1,0 +1,216 @@
+"""Grouped-query attention with the variants the assigned archs need.
+
+ - GQA (n_kv < n_heads), MHA (n_kv == n_heads)
+ - optional QKV bias (Qwen1.5 / Qwen2), optional qk-norm (Qwen3)
+ - optional sliding window (Mixtral; the long_500k dense variant) with a
+   ring-buffer KV cache of size min(seq, window) for decode
+ - self-attention with KV cache for autoregressive decode, and
+   cross-attention (Seamless enc-dec) with a precomputed encoder cache
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import rms_norm, rope
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    window: Optional[int] = None
+    rope_theta: float = 10_000.0
+    causal: bool = True
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, C, n_kv, hd)  C = min(seq, window or seq)
+    v: jnp.ndarray
+    pos: jnp.ndarray  # () int32 — next write position (absolute)
+
+
+def init_attn_params(key, d_model: int, dims: AttnDims, dtype,
+                     stack: int = 0):
+    from .common import dense_init
+
+    ks = jax.random.split(key, 4)
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    p = {
+        "wq": dense_init(ks[0], d_model, h * hd, dtype, stack=stack),
+        "wk": dense_init(ks[1], d_model, kv * hd, dtype, stack=stack),
+        "wv": dense_init(ks[2], d_model, kv * hd, dtype, stack=stack),
+        "wo": dense_init(ks[3], h * hd, d_model, dtype, stack=stack),
+    }
+    if dims.qkv_bias:
+        zeros = lambda n: jnp.zeros((stack, n) if stack else (n,), dtype)
+        p["bq"], p["bk"], p["bv"] = zeros(h * hd), zeros(kv * hd), zeros(kv * hd)
+    if dims.qk_norm:
+        ones = lambda: jnp.ones((stack, hd) if stack else (hd,), dtype)
+        p["q_norm"], p["k_norm"] = ones(), ones()
+    return p
+
+
+def _qkv(params, x, dims: AttnDims, positions):
+    B, S, _ = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    if dims.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if dims.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if positions is not None:
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, n_rep: int):
+    """q (B,Sq,H,hd); k,v (B,Sk,KV,hd); mask (B,1,Sq,Sk) or None."""
+    B, Sq, H, hd = q.shape
+    kv = k.shape[2]
+    qg = q.reshape(B, Sq, kv, n_rep, hd)
+    logits = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k).astype(jnp.float32)
+    logits = logits / (hd**0.5)
+    if mask is not None:
+        logits = logits + mask[:, :, None]  # broadcast over rep dim
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+FLASH_THRESHOLD = 4096  # use blockwise attention at/above this seq len
+
+
+def self_attention(params, x, dims: AttnDims, positions,
+                   segment_ids=None):
+    """Full-sequence (train / prefill) self-attention.
+
+    Sequences >= FLASH_THRESHOLD take the blockwise online-softmax path
+    (memory-bounded); it assumes positions == arange (true for all our
+    train/prefill entry points) and no segment packing.
+    """
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, dims, positions)
+    if S >= FLASH_THRESHOLD and segment_ids is None:
+        from .flash import blockwise_attention
+
+        out = blockwise_attention(
+            q, k, v, causal=dims.causal, window=dims.window
+        )
+        return jnp.einsum(
+            "bqk,kd->bqd", out.reshape(B, S, -1),
+            params["wo"].reshape(-1, x.shape[-1]),
+        )
+    idx = positions if positions is not None else (
+        jnp.broadcast_to(jnp.arange(S), (B, S))
+    )
+    qi = idx[:, None, :, None]
+    ki = idx[:, None, None, :]
+    mask = jnp.zeros((B, 1, S, S), jnp.float32)
+    if dims.causal:
+        mask = jnp.where(ki > qi, NEG_INF, mask)
+    if dims.window is not None:
+        mask = jnp.where(ki <= qi - dims.window, NEG_INF, mask)
+    if segment_ids is not None:
+        same = segment_ids[:, None, :, None] == segment_ids[:, None, None, :]
+        mask = jnp.where(~same, NEG_INF, mask)
+    out = _sdpa(q, k, v, mask, dims.n_heads // dims.n_kv)
+    return jnp.einsum(
+        "bqk,kd->bqd", out.reshape(B, S, -1), params["wo"].reshape(-1, x.shape[-1])
+    )
+
+
+def init_cache(batch: int, seq_len: int, dims: AttnDims, dtype) -> KVCache:
+    c = min(seq_len, dims.window) if dims.window else seq_len
+    shape = (batch, c, dims.n_kv, dims.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_self_attention(params, x, cache: KVCache, dims: AttnDims):
+    """One-token decode: x (B, 1, d). Ring-buffer write under SWA."""
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    pos = cache.pos  # absolute position of the new token
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q, k, v = _qkv(params, x, dims, positions)
+    slot = pos % C if dims.window is not None else jnp.minimum(pos, C - 1)
+    # one-hot write (not dynamic_update_slice): elementwise over the
+    # cache, so GSPMD keeps a seq-sharded cache local instead of
+    # rematerializing it around a traced-index DUS
+    oh = (jnp.arange(C) == slot).astype(cache.k.dtype)[None, :, None, None]
+    new_k = cache.k * (1 - oh) + oh * k
+    new_v = cache.v * (1 - oh) + oh * v
+    # absolute position held by each cache slot (ring-buffer aware)
+    slots = jnp.arange(C)
+    if dims.window is not None:
+        cycle = (pos // C) * C
+        abs_pos = jnp.where(slots <= slot, cycle + slots, cycle - C + slots)
+    else:
+        abs_pos = slots
+    valid = (abs_pos <= pos) & (abs_pos >= 0)
+    if dims.window is not None:
+        valid = valid & (abs_pos > pos - dims.window)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask[None, None, None, :], (B, 1, 1, C))
+    out = _sdpa(q, new_k, new_v, mask, dims.n_heads // dims.n_kv)
+    y = jnp.einsum(
+        "bqk,kd->bqd", out.reshape(B, 1, -1), params["wo"].reshape(-1, x.shape[-1])
+    )
+    return y, KVCache(new_k, new_v, pos + 1)
+
+
+def cross_attention(params, x, enc_k, enc_v, dims: AttnDims,
+                    enc_mask=None):
+    """Decoder->encoder attention; enc_k/v precomputed (B, Se, KV, hd)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"]).reshape(
+        B, S, dims.n_heads, dims.head_dim
+    )
+    if (max(S, enc_k.shape[1]) >= FLASH_THRESHOLD and enc_mask is None
+            and S % 1024 == 0 and enc_k.shape[1] % 1024 == 0):
+        from .flash import blockwise_attention
+
+        out = blockwise_attention(q, enc_k, enc_v, causal=False)
+        return jnp.einsum(
+            "bqk,kd->bqd", out.reshape(B, S, -1),
+            params["wo"].reshape(-1, x.shape[-1]),
+        )
+    mask = None
+    if enc_mask is not None:
+        mask = jnp.where(enc_mask[:, None, None, :], 0.0, NEG_INF).astype(
+            jnp.float32
+        )
+    out = _sdpa(q, enc_k, enc_v, mask, dims.n_heads // dims.n_kv)
+    return jnp.einsum(
+        "bqk,kd->bqd", out.reshape(B, S, -1), params["wo"].reshape(-1, x.shape[-1])
+    )
+
+
+def encode_kv(params, enc_out, dims: AttnDims):
+    B, Se, _ = enc_out.shape
+    k = jnp.einsum("bsd,dk->bsk", enc_out, params["wk"]).reshape(
+        B, Se, dims.n_kv, dims.head_dim
+    )
+    v = jnp.einsum("bsd,dk->bsk", enc_out, params["wv"]).reshape(
+        B, Se, dims.n_kv, dims.head_dim
+    )
+    return k, v

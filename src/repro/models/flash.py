@@ -1,0 +1,120 @@
+"""Blockwise attention with online softmax (flash-style), pure JAX.
+
+Full (S, S) score materialization at 32k+ context is a memory
+non-starter (B·H·S² f32).  This computes attention in (q_chunk ×
+k_chunk) tiles with the running (max, sum, acc) reduction, bounding
+live memory to O(S·d + q_chunk·k_chunk) — the standard memory-roofline
+fix that every production system applies; XLA:TPU lowers the inner
+einsums onto the MXU directly, so a hand-written Pallas flash kernel is
+not the bottleneck here (the Zampling reconstruct is — see kernels/).
+
+Supports causal masking, sliding windows, and GQA.  Fully-masked
+(q-block, k-block) tiles are skipped with ``lax.cond`` so causal/SWA
+FLOPs match the ideal count within one tile of slack.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+):
+    """q (B,Sq,H,hd); k,v (B,Sk,KV,hd) -> (B,Sq,H,hd).
+
+    Sq may differ from Sk (cross-attention; use causal=False there).
+    Positions are arange within each side.
+    """
+    B, S, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, Sk)
+    nq, nk = S // q_chunk, Sk // k_chunk
+    assert nq * q_chunk == S and nk * k_chunk == Sk, "S must tile evenly"
+
+    qr = q.reshape(B, nq, q_chunk, KV, rep, hd)
+    kr = k.reshape(B, nk, k_chunk, KV, hd)
+    vr = v.reshape(B, nk, k_chunk, KV, hd)
+    scale = hd**-0.5
+
+    def q_block(qi, qb):  # qb (B, q_chunk, KV, rep, hd)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kr, ki, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ki, axis=1, keepdims=False)
+            k_pos = ki * k_chunk + jnp.arange(k_chunk)
+
+            def compute(_):
+                s = jnp.einsum(
+                    "bqgrh,bkgh->bgrqk", qb, kb,
+                    preferred_element_type=jnp.float32,
+                ) * scale
+                msk = jnp.zeros((q_chunk, k_chunk), jnp.float32)
+                if causal:
+                    msk = jnp.where(
+                        k_pos[None, :] > q_pos[:, None], NEG_INF, msk
+                    )
+                if window is not None:
+                    msk = jnp.where(
+                        k_pos[None, :] <= q_pos[:, None] - window, NEG_INF, msk
+                    )
+                s = s + msk
+                new_m = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - new_m[..., None])
+                corr = jnp.exp(m - new_m)
+                new_l = l * corr + jnp.sum(p, axis=-1)
+                new_acc = acc * corr[..., None] + jnp.einsum(
+                    "bgrqk,bkgh->bgrqh", p.astype(vb.dtype), vb
+                ).astype(jnp.float32)
+                return new_m, new_l, new_acc
+
+            needed = True
+            if causal:
+                # any k_pos <= max q_pos in this pair of blocks?
+                needed = (ki * k_chunk) <= (qi * q_chunk + q_chunk - 1)
+            if window is not None:
+                needed = jnp.logical_and(
+                    needed,
+                    (ki * k_chunk + k_chunk - 1) > (qi * q_chunk - window),
+                )
+            carry = jax.lax.cond(
+                jnp.asarray(needed), compute, lambda _: (m, l, acc), None
+            )
+            return carry, None
+
+        # remat: recompute score tiles in backward instead of saving
+        # every (q_chunk, k_chunk) f32 tile (O(S^2) memory otherwise)
+        k_step = jax.checkpoint(k_step)
+
+        m0 = jnp.full((B, KV, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, KV, rep, q_chunk, hd) -> (B, q_chunk, KV, rep, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    q_block = jax.checkpoint(q_block)
+    out = jax.lax.map(
+        lambda qi: q_block(qi, jax.lax.dynamic_index_in_dim(qr, qi, 1, False)),
+        jnp.arange(nq),
+    )  # (nq, B, q_chunk, KV, rep, hd)
+    out = jnp.transpose(out, (1, 0, 2, 3, 4, 5)).reshape(B, S, H, hd)
+    return out.astype(q.dtype)

@@ -1,0 +1,56 @@
+"""Feedforward classifiers for the paper's own experiments.
+
+SMALL ARCHITECTURE: 784-20-20-10 (compression & sensitivity, §3.1/§3.3)
+MNISTFC:            784-300-100-10 (federated + Zhou comparison, §3.2),
+                    266,610 params — matches the paper's count.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .common import cross_entropy, dense_init
+
+
+def init_mlp_params(key, dims: Sequence[int], dtype=jnp.float32):
+    params = {}
+    ks = jax.random.split(key, len(dims) - 1)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        params[f"layer{i}"] = {
+            "kernel": dense_init(ks[i], a, b, dtype),
+            "bias": jnp.zeros((b,), dtype),
+        }
+    return params
+
+
+def mlp_forward(params, x):
+    n = len(params)
+    for i in range(n):
+        lp = params[f"layer{i}"]
+        x = x @ lp["kernel"] + lp["bias"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, batch):
+    logits = mlp_forward(params, batch["x"])
+    labels = jax.nn.one_hot(batch["y"], logits.shape[-1])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+def mlp_accuracy(params, batch):
+    logits = mlp_forward(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+
+
+SMALL_DIMS = (784, 20, 20, 10)
+MNISTFC_DIMS = (784, 300, 100, 10)
+
+
+def param_count(dims: Sequence[int]) -> int:
+    return sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))

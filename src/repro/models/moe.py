@@ -1,0 +1,102 @@
+"""Mixture-of-Experts block (OLMoE 64e/top-8, Mixtral 8e/top-2).
+
+GShard-style *group-local* capacity dispatch (the TPU-native MoE
+formulation): tokens are processed in groups of ``group_size``; within
+each group, tokens pick top-k experts and a (G, E, C) one-hot dispatch
+tensor routes them, with C = capacity_factor·G·k/E.  Expert FFNs run as
+one batched einsum over the expert axis — which shards over the
+``model`` mesh axis as expert parallelism, turning dispatch/combine
+into all-to-alls under GSPMD.
+
+Group-locality matters at scale: a single global dispatch tensor is
+(T, E, 1.25·T·k/E) — QUADRATIC in tokens (measured 2 TB/device at 32k
+prefill).  Grouped, total dispatch is 1.25·T·G·k — linear, and the
+group dim shards over the data axes.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MoEConfig
+from .common import dense_init
+
+GROUP_SIZE = 2048
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype, stack: int = 0):
+    ks = jax.random.split(key, 4)
+    e, f = cfg.num_experts, cfg.d_ff_expert
+
+    def expert_w(k, a, b):
+        shape = (stack, e, a, b) if stack else (e, a, b)
+        scale = (2.0 / a) ** 0.5
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    return {
+        "router": dense_init(ks[0], d_model, e, jnp.float32, stack=stack),
+        "gate": expert_w(ks[1], d_model, f),
+        "up": expert_w(ks[2], d_model, f),
+        "down": expert_w(ks[3], f, d_model),
+    }
+
+
+def _group_dispatch(xt, router, cfg: MoEConfig):
+    """xt (G, D) -> (dispatch (G,E,C), combine (G,E,C) f32, probs, sel)."""
+    G = xt.shape[0]
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(1, int(cfg.capacity_factor * G * K / E))
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, K, E)
+    pos_in_e = (jnp.cumsum(sel.reshape(G * K, E), axis=0) - 1.0).reshape(
+        G, K, E
+    )
+    pos = jnp.sum(pos_in_e * sel, axis=-1)  # (G, K) buffer slot per pick
+    keep = pos < C
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos, C).astype(jnp.int32), C + 1, dtype=jnp.float32
+    )[..., :C]  # (G, K, C)
+    dispatch = jnp.einsum("tke,tkc->tec", sel, pos_oh)
+    combine = jnp.einsum("tke,tkc,tk->tec", sel, pos_oh, gate_vals)
+    return dispatch.astype(xt.dtype), combine, probs, sel
+
+
+def moe_block(params, x, cfg: MoEConfig,
+              group_size: int = GROUP_SIZE) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    B, S, D = x.shape
+    T = B * S
+    G = min(group_size, T)
+    if T % G:
+        G = T  # single group for awkward (tiny) shapes
+    ng = T // G
+    xt = x.reshape(ng, G, D)
+
+    dispatch, combine, probs, sel = jax.vmap(
+        lambda g: _group_dispatch(g, params["router"], cfg)
+    )(xt)
+
+    ein = jnp.einsum("gtec,gtd->gecd", dispatch, xt)  # (ng, E, C, D)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", ein, params["gate"]).astype(jnp.float32)
+    ).astype(x.dtype) * jnp.einsum("gecd,edf->gecf", ein, params["up"])
+    eout = jnp.einsum("gecf,efd->gecd", h, params["down"])  # (ng, E, C, D)
+    out = jnp.einsum(
+        "gtec,gecd->gtd", combine.astype(x.dtype), eout
+    ).reshape(B, S, D)
+
+    # load-balance auxiliary loss (Switch-style), averaged over groups
+    E, K = cfg.num_experts, cfg.top_k
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    frac = jnp.sum(sel, axis=(0, 1, 2)) / (T * K)
+    aux = cfg.router_aux_coef * E * jnp.sum(frac * me)
+    return out, aux

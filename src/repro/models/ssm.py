@@ -1,0 +1,260 @@
+"""Mamba2 block — SSD (state-space duality) chunked form [arXiv:2405.21060].
+
+Train/prefill runs the block-decomposed dual form: intra-chunk terms are
+batched matmuls (MXU-friendly), inter-chunk state is a short
+``lax.scan`` recurrence over chunk summaries.  Decode is the O(1)
+recurrent update on a constant-size ``(H, P, N)`` state — which is why
+SSM/hybrid archs run the long_500k shape natively.
+
+Layout per layer (all leaves scan-stacked on a leading L axis):
+  in_proj  (D, 2·d_inner + 2·G·N + H)   -> [z | xBC | dt]
+  conv_w   (conv_width, conv_dim)        depthwise causal, conv_dim = d_inner + 2·G·N
+  conv_b   (conv_dim,)
+  A_log, D, dt_bias   (H,)
+  norm     (d_inner,)                    gated RMSNorm
+  out_proj (d_inner, D)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMConfig
+from .common import dense_init, rms_norm
+
+
+class SSMDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    headdim: int
+    d_state: int
+    n_groups: int
+    conv_width: int
+    chunk: int
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> SSMDims:
+    d_inner = cfg.expand * d_model
+    return SSMDims(
+        d_model=d_model,
+        d_inner=d_inner,
+        n_heads=d_inner // cfg.headdim,
+        headdim=cfg.headdim,
+        d_state=cfg.d_state,
+        n_groups=cfg.n_groups,
+        conv_width=cfg.conv_width,
+        chunk=cfg.chunk,
+    )
+
+
+def conv_dim(dims: SSMDims) -> int:
+    return dims.d_inner + 2 * dims.n_groups * dims.d_state
+
+
+def init_ssm_params(key, dims: SSMDims, dtype, stack: int = 0):
+    ks = jax.random.split(key, 5)
+    H = dims.n_heads
+    cd = conv_dim(dims)
+    d_in_proj = 2 * dims.d_inner + 2 * dims.n_groups * dims.d_state + H
+
+    def shp(*s):
+        return (stack, *s) if stack else s
+
+    return {
+        "in_proj": dense_init(ks[0], dims.d_model, d_in_proj, dtype,
+                              stack=stack),
+        "conv_w": (jax.random.normal(ks[1], shp(dims.conv_width, cd),
+                                     jnp.float32)
+                   * (1.0 / dims.conv_width) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros(shp(cd), dtype),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[2], shp(H), jnp.float32, 1.0, 16.0)
+        ),
+        "D": jnp.ones(shp(H), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(
+                jnp.exp(
+                    jax.random.uniform(ks[3], shp(H), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))
+                )
+            )
+        ),
+        "norm": jnp.ones(shp(dims.d_inner), dtype),
+        "out_proj": dense_init(ks[4], dims.d_inner, dims.d_model, dtype,
+                               stack=stack),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray  # (B, conv_width-1, conv_dim)
+    state: jnp.ndarray  # (B, H, P, N) f32
+
+
+def init_ssm_cache(batch: int, dims: SSMDims, dtype) -> SSMCache:
+    return SSMCache(
+        conv=jnp.zeros((batch, dims.conv_width - 1, conv_dim(dims)), dtype),
+        state=jnp.zeros(
+            (batch, dims.n_heads, dims.headdim, dims.d_state), jnp.float32
+        ),
+    )
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C); w (K,C); b (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    acc = sum(xp[:, k : k + S, :] * w[k] for k in range(K))
+    return acc + b
+
+
+def _split_proj(zxbcdt, dims: SSMDims):
+    di, gn = dims.d_inner, dims.n_groups * dims.d_state
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    return z, xBC, dt
+
+
+def _split_xbc(xBC, dims: SSMDims):
+    di, gn = dims.d_inner, dims.n_groups * dims.d_state
+    x = xBC[..., :di]
+    Bmat = xBC[..., di : di + gn]
+    Cmat = xBC[..., di + gn :]
+    return x, Bmat, Cmat
+
+
+def _group_to_heads(mat, dims: SSMDims):
+    """(B,S,G*N) -> (B,S,H,N) broadcasting each group to its heads."""
+    B, S, _ = mat.shape
+    g = mat.reshape(B, S, dims.n_groups, dims.d_state)
+    rep = dims.n_heads // dims.n_groups
+    return jnp.repeat(g, rep, axis=2)
+
+
+def ssm_block(params, u, dims: SSMDims) -> jnp.ndarray:
+    """Full-sequence SSD. u (B,S,D) -> (B,S,D)."""
+    B, S, D = u.shape
+    Lc = min(dims.chunk, S)
+    assert S % Lc == 0, f"seq {S} must tile into chunks of {Lc}"
+    nc = S // Lc
+    H, P, N = dims.n_heads, dims.headdim, dims.d_state
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    xBC = jax.nn.silu(
+        _causal_conv(xBC, params["conv_w"], params["conv_b"]).astype(
+            jnp.float32
+        )
+    ).astype(u.dtype)
+    x, Bm, Cm = _split_xbc(xBC, dims)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    xh = x.reshape(B, S, H, P)
+    Bh = _group_to_heads(Bm, dims)  # (B,S,H,N)
+    Ch = _group_to_heads(Cm, dims)
+
+    # chunked SSD
+    a = (dt * A).reshape(B, nc, Lc, H)  # log-decay per step
+    dtc = dt.reshape(B, nc, Lc, H)
+    xc = xh.reshape(B, nc, Lc, H, P)
+    Bc = Bh.reshape(B, nc, Lc, H, N)
+    Cc = Ch.reshape(B, nc, Lc, H, N)
+
+    cum = jnp.cumsum(a, axis=2)  # (B,nc,Lc,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Lc,Lc,H)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum(
+        "bclhn,bcshn->bclsh", Cc.astype(jnp.float32), Bc.astype(jnp.float32)
+    )
+    y_diag = jnp.einsum(
+        "bclsh,bclsh,bcsh,bcshp->bclhp",
+        scores,
+        jnp.transpose(Lmat, (0, 1, 2, 3, 4)),
+        dtc,
+        xc.astype(jnp.float32),
+    )
+
+    # chunk state summaries: S_c = sum_s exp(cum_end - cum_s) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Lc,H)
+    states = jnp.einsum(
+        "bcsh,bcsh,bcshn,bcshp->bchpn",
+        decay_to_end,
+        dtc,
+        Bc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(h, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h  # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,P,N)
+
+    y_off = jnp.einsum(
+        "bclhn,bclh,bchpn->bclhp",
+        Cc.astype(jnp.float32),
+        jnp.exp(cum),
+        h_prev,
+    )
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, dims.d_inner).astype(u.dtype)
+    y = rms_norm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), params["norm"]
+    )
+    return jnp.einsum("bsd,dk->bsk", y, params["out_proj"])
+
+
+def ssm_decode_step(params, u, cache: SSMCache, dims: SSMDims
+                    ) -> Tuple[jnp.ndarray, SSMCache]:
+    """One-token recurrent update. u (B,1,D)."""
+    B = u.shape[0]
+    H, P, N = dims.n_heads, dims.headdim, dims.d_state
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", u, params["in_proj"])[:, 0]
+    z, xBC, dt = _split_proj(zxbcdt, dims)
+    conv_hist = jnp.concatenate([cache.conv, xBC[:, None, :]], axis=1)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", conv_hist.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)
+    )
+    xBC = jax.nn.silu(conv_out).astype(u.dtype)
+    x, Bm, Cm = _split_xbc(xBC, dims)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    rep = H // dims.n_groups
+    Bh = jnp.repeat(Bm.reshape(B, dims.n_groups, N), rep, 1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, dims.n_groups, N), rep, 1).astype(jnp.float32)
+
+    dA = jnp.exp(dt * A)  # (B,H)
+    state = cache.state * dA[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch) + params["D"][None, :, None] * xh
+    y = y.reshape(B, dims.d_inner).astype(u.dtype)
+    y = rms_norm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype), params["norm"]
+    )
+    out = jnp.einsum("bd,dk->bk", y, params["out_proj"])[:, None, :]
+    new_cache = SSMCache(conv=conv_hist[:, 1:, :].astype(cache.conv.dtype),
+                         state=state)
+    return out, new_cache

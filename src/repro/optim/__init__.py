@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, adam, sgd, clip_by_global_norm, chain
+
+__all__ = ["Optimizer", "adam", "sgd", "clip_by_global_norm", "chain"]

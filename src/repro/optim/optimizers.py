@@ -1,0 +1,105 @@
+"""Native optimizers (no optax in the container) — optax-style triples.
+
+An Optimizer is (init, update):
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Adam matches the paper's experimental setup (Adam, beta1=0.9); SGD is
+used for the federated local steps where the paper quotes a plain
+learning rate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params=None):
+        del params
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr * g, grads), state
+        new_v = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        return jax.tree.map(lambda v: -lr * v, new_v), new_v
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), z(), z())
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        upd = jax.tree.map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return upd, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    """Left-to-right composition; each stage transforms the updates."""
+
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params=None):
+        new_states = []
+        upd = grads
+        for o, s in zip(opts, state):
+            upd, ns = o.update(upd, s, params)
+            new_states.append(ns)
+        return upd, tuple(new_states)
+
+    return Optimizer(init, update)

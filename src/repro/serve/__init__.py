@@ -1,0 +1,3 @@
+from .decode import generate, serve_from_compressed
+
+__all__ = ["generate", "serve_from_compressed"]

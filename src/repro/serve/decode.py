@@ -1,0 +1,74 @@
+"""Serving: batched autoregressive generation over the decode_step path.
+
+At production scale the decode_step is pjit-lowered per the dry-run;
+this module drives it for the runnable examples/tests (CPU scale).
+``serve_from_compressed`` is the Zampling-native deployment: the node
+stores only (seed, z) — m/32 bits of model state — and reconstructs
+weights on load (or per-step under the 'streaming' memory trade
+analyzed in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.zampling import ZamplingSpecs, weights_from_masks
+from ..models.model import Model
+
+
+def generate(
+    model: Model,
+    params,
+    prompt: jnp.ndarray,  # (B, Sp) int32
+    max_new_tokens: int,
+    *,
+    seq_len: Optional[int] = None,
+    temperature: float = 0.0,
+    key=None,
+):
+    """Greedy (or temperature) generation. Returns (B, Sp+new) tokens."""
+    B, Sp = prompt.shape
+    seq_len = seq_len or (Sp + max_new_tokens)
+    cache = model.init_cache(params, B, seq_len)
+
+    @jax.jit
+    def step(cache, tok):
+        return model.decode_step(params, cache, {"tokens": tok})
+
+    # feed the prompt token-by-token (CPU-scale prefill)
+    logits = None
+    for t in range(Sp):
+        logits, cache = step(cache, prompt[:, t : t + 1])
+
+    toks = [prompt]
+    cur = None
+    for i in range(max_new_tokens):
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            cur = jax.random.categorical(
+                sub, logits[:, -1].astype(jnp.float32) / temperature
+            )[:, None]
+        else:
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        toks.append(cur)
+        if i + 1 < max_new_tokens:
+            logits, cache = step(cache, cur)
+    return jnp.concatenate(toks, axis=1)
+
+
+def serve_from_compressed(
+    model: Model,
+    zspecs: ZamplingSpecs,
+    masks: Dict[str, Any],
+    dense: Dict[str, Any],
+    prompt,
+    max_new_tokens: int,
+    **kw,
+):
+    """Deployment from the compressed (z, dense) artifact: reconstruct
+    once, then serve. Storage = n bits + dense leaves (vs 32m naive)."""
+    params = weights_from_masks(zspecs, masks, {"dense": dense})
+    return generate(model, params, prompt, max_new_tokens, **kw)

@@ -1,0 +1,7 @@
+from .local import LocalTrainConfig, evaluate, train_local_zampling
+from .steps import TrainState, make_train_step, make_zampling_train_step
+
+__all__ = [
+    "LocalTrainConfig", "evaluate", "train_local_zampling",
+    "TrainState", "make_train_step", "make_zampling_train_step",
+]

@@ -1,0 +1,68 @@
+"""Train steps for the big-model path (pjit-able; used by the dry-run).
+
+Two step builders:
+ - ``make_train_step``            standard training (the naive-FL /
+                                  dense-DP baseline the paper compares
+                                  against);
+ - ``make_zampling_train_step``   training-by-sampling on scores: the
+                                  paper's system. Per step: p=clip(s),
+                                  z~Bern(p) (straight-through), w=Qz,
+                                  CE loss, Adam/SGD on s.
+
+Both close over static specs/model and take (state, batch, key).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.zampling import ZamplingSpecs, sample_weights
+from ..models.model import Model, loss_fn
+from ..optim import Optimizer
+from ..optim.optimizers import apply_updates
+
+
+class TrainState(NamedTuple):
+    trainable: Any  # params (standard) or {'scores','dense'} (zampling)
+    opt: Any
+    step: jnp.ndarray
+
+
+def init_train_state(trainable, optimizer: Optimizer) -> TrainState:
+    return TrainState(trainable, optimizer.init(trainable),
+                      jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, optimizer: Optimizer):
+    def step(state: TrainState, batch):
+        def loss(params):
+            return loss_fn(model, params, batch)
+
+        l, grads = jax.value_and_grad(loss)(state.trainable)
+        updates, opt = optimizer.update(grads, state.opt, state.trainable)
+        params = apply_updates(state.trainable, updates)
+        return TrainState(params, opt, state.step + 1), {"loss": l}
+
+    return step
+
+
+def make_zampling_train_step(model: Model, zspecs: ZamplingSpecs,
+                             optimizer: Optimizer):
+    def step(state: TrainState, batch, key):
+        key = jax.random.fold_in(key, state.step)
+
+        def loss(trainable):
+            params = sample_weights(zspecs, trainable, key)
+            return loss_fn(model, params, batch)
+
+        l, grads = jax.value_and_grad(loss)(state.trainable)
+        updates, opt = optimizer.update(grads, state.opt, state.trainable)
+        trainable = jax.tree.map(
+            lambda p, u: (p + u).astype(p.dtype), state.trainable, updates
+        )
+        return TrainState(trainable, opt, state.step + 1), {"loss": l}
+
+    return step

@@ -1,0 +1,104 @@
+"""Pallas kernel validation: sweep shapes/dtypes, allclose vs ref.py oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qspec import make_qspec
+from repro.kernels import ops
+from repro.kernels.qz_reconstruct import qz_reconstruct_bwd, qz_reconstruct_fwd
+from repro.kernels.ref import grad_z_ref, reconstruct_ref
+
+SWEEP = [
+    # (shape, compression, d, window)
+    ((512,), 2.0, 4, 64),
+    ((1000,), 4.0, 1, 128),
+    ((64, 96), 8.0, 8, 256),
+    ((3, 40, 50), 3.0, 5, 32),
+    ((2048, 17), 32.0, 8, 512),
+    ((striped := 4096,), 1.0, 2, 512),
+]
+
+
+def _mk(shape, c, d, window, seed=11):
+    fan = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+    return make_qspec(1, shape, fan, compression=c, d=d, window=window,
+                      seed=seed)
+
+
+@pytest.mark.parametrize("shape,c,d,window", SWEEP)
+def test_pallas_fwd_matches_ref(shape, c, d, window):
+    spec = _mk(shape, c, d, window)
+    z = (np.random.RandomState(0).rand(spec.n) < 0.5).astype(np.float32)
+    want = np.asarray(reconstruct_ref(spec, jnp.asarray(z))).reshape(-1)
+    got = np.asarray(qz_reconstruct_fwd(spec, jnp.asarray(z), interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,c,d,window", SWEEP)
+def test_pallas_bwd_matches_ref(shape, c, d, window):
+    spec = _mk(shape, c, d, window)
+    g = np.random.RandomState(1).randn(spec.m).astype(np.float32)
+    want = np.asarray(grad_z_ref(spec, jnp.asarray(g)))
+    got = np.asarray(qz_reconstruct_bwd(spec, jnp.asarray(g), interpret=True))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm", [64, 256, 1024])
+def test_pallas_block_size_invariance(bm):
+    spec = _mk((900, 30), 16.0, 8, 128)
+    z = (np.random.RandomState(2).rand(spec.n) < 0.4).astype(np.float32)
+    want = np.asarray(reconstruct_ref(spec, jnp.asarray(z))).reshape(-1)
+    got = np.asarray(
+        qz_reconstruct_fwd(spec, jnp.asarray(z), bm=bm, interpret=True)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_dispatch_dtypes(dtype):
+    spec = _mk((64, 80), 4.0, 6, 128)
+    z = jnp.asarray((np.random.RandomState(3).rand(spec.n) < 0.5), jnp.float32)
+    ref = reconstruct_ref(spec, z, dtype=dtype)
+    for impl in ("ref", "pallas"):
+        got = ops.reconstruct(spec, z, dtype=dtype, impl=impl)
+        assert got.dtype == dtype and got.shape == spec.shape
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("chunks", [1, 3, 8])
+def test_ops_chunked_matches(chunks):
+    spec = _mk((777,), 2.0, 4, 64)
+    z = jnp.asarray((np.random.RandomState(4).rand(spec.n) < 0.5), jnp.float32)
+    want = ops.reconstruct(spec, z, chunks=1)
+    got = ops.reconstruct(spec, z, chunks=chunks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_ops_custom_vjp_pallas_end_to_end():
+    spec = _mk((300, 20), 8.0, 5, 64)
+    z = jnp.asarray(np.random.RandomState(5).rand(spec.n), jnp.float32)
+    v = jnp.asarray(np.random.RandomState(6).randn(*spec.shape), jnp.float32)
+
+    def loss(z_, impl):
+        return jnp.vdot(ops.reconstruct(spec, z_, impl=impl), v)
+
+    g_ref = jax.grad(lambda z_: loss(z_, "ref"))(z)
+    g_pl = jax.grad(lambda z_: loss(z_, "pallas"))(z)
+    np.testing.assert_allclose(np.asarray(g_pl), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_under_jit():
+    spec = _mk((128, 64), 8.0, 8, 128)
+    z = jnp.asarray(np.random.RandomState(7).rand(spec.n) < 0.5, jnp.float32)
+    f = jax.jit(lambda z_: ops.reconstruct(spec, z_))
+    np.testing.assert_allclose(
+        np.asarray(f(z)), np.asarray(ops.reconstruct(spec, z)),
+        rtol=1e-4, atol=1e-6,
+    )
