@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Fast CI gate: tier-1 test subset + the reconstruction perf baseline.
+#
+#   bash scripts/ci.sh
+#
+# 1. runs the fast tier-1 tests (pytest.ini deselects @slow by default;
+#    run `python -m pytest -m "" -q` for the full suite);
+# 2. runs the kernel + batched-federated reconstruction benchmarks and
+#    merges the rows into BENCH_reconstruct.json at the repo root, so
+#    every PR leaves a perf trajectory the next one can diff against.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (fast subset) =="
+python -m pytest -x -q
+
+echo "== reconstruction benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround
+
+echo "== perf baseline =="
+python - <<'EOF'
+import json
+rows = json.load(open("BENCH_reconstruct.json"))
+for r in rows:
+    if r.get("bench") == "federated_round_reconstruct":
+        print(f"  K={r['K']:>3}: vmap={r['vmap_us']/1e3:8.1f}ms "
+              f"batched={r['batched_us']/1e3:8.1f}ms "
+              f"speedup={r['speedup']:.2f}x")
+EOF

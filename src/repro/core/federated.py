@@ -9,7 +9,12 @@ One round:
 
 Two execution paths with identical math:
   * ``federated_round``        — vmap over a stacked client axis
-    (CPU simulation; the paper's 10-client experiments)
+    (CPU simulation; the paper's 10-client experiments).  The
+    ``w = Q z`` inside each client's forward/backward does NOT pay
+    K-times Q regeneration: ``kernels.ops`` installs custom_vmap rules
+    on the reconstruction custom_vjp, so this vmap lowers onto the
+    natively-batched kernels (one hash-RNG generation, K-column
+    contraction) — see ``kernels.ops.reconstruct_batched``
   * ``sharded_client_update``  — the piece that runs inside
     ``shard_map`` on the production mesh, where the client axis IS the
     ``data`` mesh axis and step 4 is a ``psum`` of the (uint8 or

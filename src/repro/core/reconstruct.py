@@ -10,6 +10,27 @@ Layout (QSpec docstring): rows live in a padded per-block space of
 with ``major_axis`` moved to the front (sharding-major order).  All
 functions here compute globally — the distributed equivalent is
 ``kernels.qz_sharded``.
+
+Batched (multi-client) variants: ``reconstruct_batched_ref`` /
+``grad_z_batched_ref`` take a stacked ``Z (K, n)`` and regenerate the
+hash-RNG indices/values of Q ONCE, contracting them against all K
+client z-vectors.  ``jax.vmap(reconstruct_ref)`` regenerates Q per
+client, so at K simulated clients per host the batched path removes
+(K-1)/K of the hash+Box-Muller work — the dominant cost of the ref
+path (measured ~90% of a single-client reconstruct at paper scale).
+The contraction strategy is size-dependent (``_BATCH_MAP_THRESHOLD``):
+
+ - LARGE specs (hash work ``m_pad·d`` above the threshold): a
+   ``lax.map`` of 1-D gathers over clients.  XLA:CPU lowers the
+   (K, m_pad, d) mega-gather to a strided column gather that is ~2x
+   slower than K contiguous row gathers, and the map keeps temporaries
+   at O(m_pad·d) instead of O(K·m_pad·d).  Measured ~4x over vmap at
+   K=10 on the benchmark spec (m=1M, d=8).
+ - SMALL specs: one fused batched gather + einsum.  Inside
+   ``vmap(grad(lax.scan))`` (the federated round) a ``lax.map`` body
+   costs ~ms per iteration in XLA:CPU while-loop form, which at test
+   scale (m~16k) swamps the hash savings; the fused form is exactly
+   what vmap would emit, minus the K-times hash regeneration.
 """
 
 from __future__ import annotations
@@ -20,13 +41,21 @@ import jax.numpy as jnp
 from .qspec import QSpec, padded_row_valid, padded_row_window, row_indices, row_values
 
 
-def _w_padded(spec: QSpec, z):
-    """All padded rows: w_pad (m_pad,) f32."""
+def _row_plan(spec: QSpec):
+    """Hash-RNG indices/values for ALL padded rows, generated once.
+
+    Returns (gidx (m_pad, d) global z-indices, vals (m_pad, d) f32).
+    """
     rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
     win = padded_row_window(spec, rp.astype(jnp.int32))
     idx = row_indices(spec, rp)  # (m_pad, d) in-window
     vals = row_values(spec, rp, dtype=jnp.float32)
-    gidx = win[:, None] * spec.window + idx
+    return win[:, None] * spec.window + idx, vals
+
+
+def _w_padded(spec: QSpec, z):
+    """All padded rows: w_pad (m_pad,) f32."""
+    gidx, vals = _row_plan(spec)
     zg = jnp.take(z.astype(jnp.float32), gidx, axis=0)
     return jnp.sum(vals * zg, axis=-1)
 
@@ -55,6 +84,82 @@ def _move(spec: QSpec, w):
     return jnp.moveaxis(w, spec.major_axis, 0).reshape(-1)
 
 
+def _select_valid_batched(spec: QSpec, w_pad):
+    """(K, m_pad) -> (K, m) in moved (sharding-major) flat order."""
+    k = w_pad.shape[0]
+    return w_pad.reshape(k, spec.shard_count, spec.m_pad_loc)[
+        :, :, : spec.m_blk
+    ].reshape(k, spec.m)
+
+
+def _insert_padding_batched(spec: QSpec, flat_moved):
+    """(K, m) moved order -> (K, m_pad) with per-block padding zeros."""
+    k = flat_moved.shape[0]
+    blocks = flat_moved.reshape(k, spec.shard_count, spec.m_blk)
+    return jnp.pad(
+        blocks, ((0, 0), (0, 0), (0, spec.m_pad_loc - spec.m_blk))
+    ).reshape(k, spec.m_pad)
+
+
+def _unmove_batched(spec: QSpec, flat_moved):
+    """(K, m) moved flat order -> (K, *spec.shape)."""
+    k = flat_moved.shape[0]
+    w = flat_moved.reshape(k, *spec.moved_shape)
+    return jnp.moveaxis(w, 1, spec.major_axis + 1)
+
+
+def _move_batched(spec: QSpec, w):
+    """(K, *spec.shape) -> (K, m) moved flat order."""
+    return jnp.moveaxis(w, spec.major_axis + 1, 1).reshape(w.shape[0], -1)
+
+
+# Above this much hash work (m_pad * d elements) the once-per-round
+# regeneration saving beats XLA:CPU's per-iteration lax.map overhead.
+_BATCH_MAP_THRESHOLD = 2_000_000
+
+
+def reconstruct_batched_ref(spec: QSpec, Z, dtype=None, row_sharding=None):
+    """W = Q z^(k) for K stacked clients. ``Z``: (K, n) -> (K, *shape)."""
+    del row_sharding
+    if Z.ndim != 2 or Z.shape[-1] != spec.n:
+        raise ValueError(f"Z has shape {Z.shape}, spec expects (K, {spec.n})")
+    dtype = dtype or Z.dtype
+    gidx, vals = _row_plan(spec)
+    zf = Z.astype(jnp.float32)
+    if spec.m_pad * spec.d >= _BATCH_MAP_THRESHOLD:
+        w_pad = jax.lax.map(
+            lambda z: jnp.sum(vals * jnp.take(z, gidx, axis=0), axis=-1), zf
+        )
+    else:
+        zg = jnp.take(zf, gidx, axis=1)  # (K, m_pad, d)
+        w_pad = jnp.einsum("md,kmd->km", vals, zg)
+    w = _select_valid_batched(spec, w_pad)
+    return _unmove_batched(spec, w).astype(dtype)
+
+
+def grad_z_batched_ref(spec: QSpec, grad_W, row_sharding=None):
+    """Q^T grad_w per client: (K, *shape) -> (K, n) f32."""
+    del row_sharding
+    g_pad = _insert_padding_batched(
+        spec, _move_batched(spec, grad_W.astype(jnp.float32))
+    )
+    gidx, vals = _row_plan(spec)
+    gidx = gidx.reshape(-1)
+    if spec.m_pad * spec.d >= _BATCH_MAP_THRESHOLD:
+        # unlike the forward gather, the scatter-add batches WELL under
+        # vmap on XLA:CPU (lax.map of scatters measured 2x slower, the
+        # (K, m_pad*d) one-shot batched scatter 1.5x slower); vmap-of-
+        # scatter with the hash hoisted is the fastest of the three
+        def one(gk):
+            out = jnp.zeros((spec.n,), jnp.float32)
+            return out.at[gidx].add((vals * gk[:, None]).reshape(-1))
+
+        return jax.vmap(one)(g_pad)
+    contrib = (vals[None] * g_pad[:, :, None]).reshape(g_pad.shape[0], -1)
+    out = jnp.zeros((g_pad.shape[0], spec.n), jnp.float32)
+    return out.at[:, gidx].add(contrib)
+
+
 def reconstruct_ref(spec: QSpec, z, dtype=None, row_sharding=None):
     """w = Q z for one tensor. ``z``: (n,) -> weights with spec.shape."""
     del row_sharding  # the ref path computes globally
@@ -69,23 +174,15 @@ def grad_z_ref(spec: QSpec, grad_w, row_sharding=None):
     """Q^T grad_w — the reconstruction transpose. Returns (n,) f32."""
     del row_sharding
     g = _insert_padding(spec, _move(spec, grad_w.astype(jnp.float32)))
-    rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
-    win = padded_row_window(spec, rp.astype(jnp.int32))
-    idx = row_indices(spec, rp)
-    vals = row_values(spec, rp)
-    gidx = (win[:, None] * spec.window + idx).reshape(-1)
+    gidx, vals = _row_plan(spec)
     out = jnp.zeros((spec.n,), jnp.float32)
-    return out.at[gidx].add((vals * g[:, None]).reshape(-1))
+    return out.at[gidx.reshape(-1)].add((vals * g[:, None]).reshape(-1))
 
 
 def materialize_q(spec: QSpec):
     """Dense (m, n) Q in NATURAL (spec.shape row-major) order —
     tests/small-scale theory checks ONLY."""
-    rp = jnp.arange(spec.m_pad, dtype=jnp.uint32)
-    win = padded_row_window(spec, rp.astype(jnp.int32))
-    idx = row_indices(spec, rp)
-    vals = row_values(spec, rp)
-    gidx = win[:, None] * spec.window + idx
+    gidx, vals = _row_plan(spec)
     q_pad = jnp.zeros((spec.m_pad, spec.n), jnp.float32)
     q_pad = q_pad.at[jnp.arange(spec.m_pad)[:, None], gidx].add(vals)
     q_moved = q_pad.reshape(spec.shard_count, spec.m_pad_loc, spec.n)[

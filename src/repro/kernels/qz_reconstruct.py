@@ -17,8 +17,33 @@ The backward kernel computes ``grad_z = Q^T grad_w`` with the transposed
 one-hot contraction, accumulating over the ``j`` (inner) grid dimension
 into the same z-window output block (revisited-output pattern).
 
+Batched multi-client kernels (``qz_reconstruct_batched_fwd/bwd``):
+the federated round simulates K clients per host, each reconstructing
+from its own mask ``z^(k)``.  The batched grid is IDENTICAL to the
+single-client grid ``(num_windows, blocks_per_window)`` — the client
+axis is carried inside the block, never in the grid, so the hash-RNG
+indices/values of Q are regenerated once per block instead of K times:
+
+ - input is the transposed z-slab ``Zt (n, K)``; block (i, j) reads the
+   ``(window, K)`` slab of window ``i`` — K client columns ride along
+   for free in the same DMA;
+ - the gather-as-matmul becomes ``onehot (bm·d, window) @ slab
+   (window, K)`` so the MXU produces K output columns per pass (the
+   single-client kernel wastes 127/128 MXU lanes on a (window,) vector;
+   with K clients the same one-hot feeds K lanes);
+ - output tile is ``(bm, K)``; the wrapper transposes back to (K, m).
+
+VMEM budget per block at bm=256, window=512, d=8, K=32 (f32):
+slab 512·32·4 = 64 KiB, one-hot 256·8·512·4 = 4 MiB, zsel
+256·8·32·4 = 256 KiB, out 256·32·4 = 32 KiB — ~4.4 MiB total, well
+under the ~16 MiB/core VMEM budget; K up to ~128 fits (one-hot
+dominates and is K-independent).  The backward accumulates the
+transposed contraction into a ``(window, K)`` grad-z-slab with the
+same revisited-output pattern as the single-client kernel.
+
 Validated in interpret mode against ``ref.reconstruct_ref`` /
-``ref.grad_z_ref`` over shape/dtype sweeps (tests/test_kernels.py).
+``ref.grad_z_ref`` over shape/dtype sweeps (tests/test_kernels.py) and
+against the batched ref path (tests/test_batched.py).
 """
 
 from __future__ import annotations
@@ -40,49 +65,56 @@ def _grid_dims(spec: QSpec, bm: int):
     return spec.num_windows, bpw, spec.num_windows * bpw * bm  # m_grid
 
 
-def _fwd_kernel(z_ref, w_ref, *, spec: QSpec, bm: int, bpw: int):
+def _block_rows(spec: QSpec, bm: int, *, masked: bool):
+    """Regenerate this grid block's Q rows from the hash RNG.
+
+    Returns (idx (bm, d) in-window, vals (bm, d) f32).  With
+    ``masked`` (backward kernels), padding rows get zeroed vals so they
+    never scatter garbage into grad_z; forward kernels leave them live
+    (their garbage weights are sliced off by the wrapper) but they
+    still index safely in-window.
+    """
     i = pl.program_id(0)  # window id
     j = pl.program_id(1)  # block within window
-    row0 = i * spec.rows_per_window + j * bm
-    rows = row0 + jax.lax.iota(jnp.int32, bm)
-    # Rows past this window's span (padding) contribute garbage weights
-    # that the wrapper slices off; they still index safely in-window.
+    rows = i * spec.rows_per_window + j * bm + jax.lax.iota(jnp.int32, bm)
     idx = row_indices(spec, rows)  # (bm, d) in [0, window)
     vals = row_values(spec, rows, dtype=jnp.float32)  # (bm, d)
+    if masked:
+        live = (rows < spec.m) & (
+            jax.lax.iota(jnp.int32, bm) + j * bm < spec.rows_per_window
+        )
+        vals = vals * live[:, None].astype(jnp.float32)
+    return idx, vals
+
+
+def _onehot(idx, window: int):
+    """(bm, d) in-window indices -> (bm*d, window) f32 one-hot — the
+    gather-as-matmul encoding shared by all four kernels."""
+    flat = idx.reshape(-1, 1)
+    return (flat == jax.lax.iota(jnp.int32, window)[None, :]).astype(
+        jnp.float32
+    )
+
+
+def _fwd_kernel(z_ref, w_ref, *, spec: QSpec, bm: int, bpw: int):
+    idx, vals = _block_rows(spec, bm, masked=False)
     zwin = z_ref[...].astype(jnp.float32)  # (window,)
-    # gather-as-matmul: onehot (bm*d, window) @ zwin (window,)
-    onehot = (
-        idx.reshape(bm * spec.d, 1)
-        == jax.lax.iota(jnp.int32, spec.window)[None, :]
-    ).astype(jnp.float32)
-    zsel = jnp.dot(onehot, zwin, preferred_element_type=jnp.float32)
+    # onehot (bm*d, window) @ zwin (window,)
+    zsel = jnp.dot(_onehot(idx, spec.window), zwin,
+                   preferred_element_type=jnp.float32)
     w_ref[...] = jnp.sum(vals * zsel.reshape(bm, spec.d), axis=-1)
 
 
 def _bwd_kernel(g_ref, gz_ref, *, spec: QSpec, bm: int, bpw: int):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
+    @pl.when(pl.program_id(1) == 0)
     def _init():
         gz_ref[...] = jnp.zeros_like(gz_ref)
 
-    row0 = i * spec.rows_per_window + j * bm
-    rows = row0 + jax.lax.iota(jnp.int32, bm)
-    # padding rows must not scatter garbage into grad_z: zero their vals
-    live = (rows < spec.m) & (
-        jax.lax.iota(jnp.int32, bm) + j * bm < spec.rows_per_window
-    )
-    idx = row_indices(spec, rows)
-    vals = row_values(spec, rows, dtype=jnp.float32)
-    vals = vals * live[:, None].astype(jnp.float32)
+    idx, vals = _block_rows(spec, bm, masked=True)
     g = g_ref[...].astype(jnp.float32)  # (bm,)
     contrib = (vals * g[:, None]).reshape(bm * spec.d)  # (bm*d,)
-    onehot = (
-        idx.reshape(bm * spec.d, 1)
-        == jax.lax.iota(jnp.int32, spec.window)[None, :]
-    ).astype(jnp.float32)
-    gz_ref[...] += jnp.dot(contrib, onehot, preferred_element_type=jnp.float32)
+    gz_ref[...] += jnp.dot(contrib, _onehot(idx, spec.window),
+                           preferred_element_type=jnp.float32)
 
 
 def qz_reconstruct_fwd(spec: QSpec, z, *, bm: int = DEFAULT_BM,
@@ -122,3 +154,76 @@ def qz_reconstruct_bwd(spec: QSpec, grad_w, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((spec.n,), jnp.float32),
         interpret=interpret,
     )(g)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-client kernels (client axis carried in the block)
+# ---------------------------------------------------------------------------
+
+def _bfwd_kernel(zt_ref, w_ref, *, spec: QSpec, bm: int, nclients: int):
+    idx, vals = _block_rows(spec, bm, masked=False)
+    slab = zt_ref[...].astype(jnp.float32)  # (window, K)
+    # one one-hot, K clients: (bm*d, window) @ (window, K) -> (bm*d, K)
+    zsel = jnp.dot(_onehot(idx, spec.window), slab,
+                   preferred_element_type=jnp.float32)
+    w_ref[...] = jnp.sum(
+        vals[..., None] * zsel.reshape(bm, spec.d, nclients), axis=1
+    )
+
+
+def _bbwd_kernel(g_ref, gz_ref, *, spec: QSpec, bm: int, nclients: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        gz_ref[...] = jnp.zeros_like(gz_ref)
+
+    idx, vals = _block_rows(spec, bm, masked=True)
+    g = g_ref[...].astype(jnp.float32)  # (bm, K)
+    contrib = (vals[:, :, None] * g[:, None, :]).reshape(
+        bm * spec.d, nclients
+    )
+    gz_ref[...] += jnp.dot(_onehot(idx, spec.window).T, contrib,
+                           preferred_element_type=jnp.float32)
+
+
+def qz_reconstruct_batched_fwd(spec: QSpec, Z, *, bm: int = DEFAULT_BM,
+                               interpret: bool = True):
+    """Batched Pallas forward: Z (K, n) f32 -> W (K, m) f32 (flat)."""
+    nclients = Z.shape[0]
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    zt = Z.astype(jnp.float32).T  # (n, K) — window-major slabs
+    out = pl.pallas_call(
+        functools.partial(_bfwd_kernel, spec=spec, bm=bm, nclients=nclients),
+        grid=(nw, bpw),
+        in_specs=[pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((bm, nclients), lambda i, j: (i * bpw + j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_grid, nclients), jnp.float32),
+        interpret=interpret,
+    )(zt)
+    if bpw * bm != spec.rows_per_window:
+        out = out.reshape(nw, bpw * bm, nclients)[
+            :, : spec.rows_per_window
+        ].reshape(-1, nclients)
+    return out[: spec.m].T
+
+
+def qz_reconstruct_batched_bwd(spec: QSpec, grad_W, *, bm: int = DEFAULT_BM,
+                               interpret: bool = True):
+    """Batched Pallas backward: grad_W (K, m) -> grad_Z (K, n) f32."""
+    nclients = grad_W.shape[0]
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    g = grad_W.reshape(nclients, -1).astype(jnp.float32)
+    g = jnp.pad(g, ((0, 0), (0, spec.m_pad - spec.m)))
+    if bpw * bm != spec.rows_per_window:
+        g = g.reshape(nclients, nw, spec.rows_per_window)
+        g = jnp.pad(g, ((0, 0), (0, 0),
+                        (0, bpw * bm - spec.rows_per_window)))
+    gt = g.reshape(nclients, m_grid).T  # (m_grid, K)
+    out = pl.pallas_call(
+        functools.partial(_bbwd_kernel, spec=spec, bm=bm, nclients=nclients),
+        grid=(nw, bpw),
+        in_specs=[pl.BlockSpec((bm, nclients), lambda i, j: (i * bpw + j, 0))],
+        out_specs=pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((spec.n, nclients), jnp.float32),
+        interpret=interpret,
+    )(gt)
+    return out.T

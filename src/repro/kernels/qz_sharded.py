@@ -13,7 +13,18 @@ with the sharding-major layout (QSpec.major_axis/shard_count):
    ``out_specs`` reassembles the global tensor with ZERO collectives.
 
 The shard_map is entered without an explicit mesh so it composes with
-the (partially-manual) context mesh of the federated round.
+the (partially-manual) context mesh of the federated round.  On jax
+versions without the top-level ``jax.shard_map`` entry point the mesh
+is taken from the ambient ``with mesh:`` context instead
+(``_shard_map`` below), so the op is exercisable on forced-multi-device
+CPU too.
+
+Batched variants (``sharded_reconstruct_batched`` /
+``sharded_grad_z_batched``): K stacked clients share one generation of
+the chunk's hash-RNG indices/values; z rides as a (K, n_loc) slab per
+shard and the per-chunk temporaries stay bounded at
+O(rpc·d + K·rpc) — the chunk count scales with K so the budget in
+TARGET_CHUNK_BYTES holds for any K.
 """
 
 from __future__ import annotations
@@ -30,17 +41,43 @@ AXIS = "model"
 TARGET_CHUNK_BYTES = 128 << 20  # bound the (rows, d) temporaries
 
 
-def _num_chunks(spec: QSpec) -> int:
-    per_row = spec.d * 4 * 3  # idx + vals + gathered z, f32/i32
+def _shard_map(f, in_specs, out_specs):
+    """jax.shard_map when available; else the experimental API bound to
+    the ambient ``with mesh:`` context (jax<=0.4.x spelling)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             axis_names={AXIS}, check_vma=False)
+    from jax._src import mesh as mesh_lib
+    from jax.experimental.shard_map import shard_map as _sm
+
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty or AXIS not in mesh.axis_names:
+        raise RuntimeError(
+            "sharded reconstruction needs an active mesh with a "
+            f"'{AXIS}' axis (enter `with mesh:`) on this jax version"
+        )
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def _num_chunks(spec: QSpec, nclients: int = 1) -> int:
+    per_row = spec.d * 4 * 3 + nclients * 4  # idx/vals/gather + K outputs
     return max(1, min(spec.m_pad_loc,
                       (spec.m_pad_loc * per_row) // TARGET_CHUNK_BYTES))
+
+
+def _chunk_live_rows(spec: QSpec, c, rpc):
+    """Clamped shard-local row ids for chunk ``c`` + their live mask
+    (the tail chunk repeats row m_pad_loc-1; its updates are zeroed)."""
+    loc = c * rpc + jnp.arange(rpc, dtype=jnp.int32)
+    rows = jnp.minimum(loc, spec.m_pad_loc - 1)
+    return rows, (loc < spec.m_pad_loc).astype(jnp.float32)
 
 
 def _chunk_rows(spec: QSpec, c, rpc):
     """Gather indices + values for rows [c*rpc, (c+1)*rpc) of this shard."""
     sid = jax.lax.axis_index(AXIS)
-    loc = c * rpc + jnp.arange(rpc, dtype=jnp.int32)
-    loc = jnp.minimum(loc, spec.m_pad_loc - 1)  # clamp tail overrun
+    loc, _ = _chunk_live_rows(spec, c, rpc)
     rp = (sid * spec.m_pad_loc + loc).astype(jnp.uint32)
     idx = row_indices(spec, rp)  # (rpc, d) in-window
     vals = row_values(spec, rp, dtype=jnp.float32)
@@ -60,6 +97,13 @@ def _check(spec: QSpec, ms: int):
 def _out_spec(spec: QSpec) -> P:
     dims = [None] * len(spec.shape)
     dims[spec.major_axis] = AXIS
+    return P(*dims)
+
+
+def _out_spec_b(spec: QSpec) -> P:
+    """Weight PartitionSpec with a leading (replicated) client axis."""
+    dims = [None] * (len(spec.shape) + 1)
+    dims[spec.major_axis + 1] = AXIS
     return P(*dims)
 
 
@@ -83,10 +127,41 @@ def sharded_reconstruct(spec: QSpec, z, ms: int):
         w = jax.lax.map(one, jnp.arange(nc)).reshape(-1)[: spec.m_blk]
         return jnp.moveaxis(w.reshape(loc_moved), 0, a)
 
-    return jax.shard_map(
-        local, in_specs=P(AXIS), out_specs=_out_spec(spec),
-        axis_names={AXIS}, check_vma=False,
-    )(z.astype(jnp.float32))
+    return _shard_map(local, P(AXIS), _out_spec(spec))(
+        z.astype(jnp.float32)
+    )
+
+
+def sharded_reconstruct_batched(spec: QSpec, Z, ms: int):
+    """W = Q z^(k), K clients at once.  ``Z``: (K, n) with the z axis
+    sharded P(None, 'model'); returns (K, *spec.shape) sharded on the
+    tensor's major axis.  The chunk indices/values are generated once
+    per chunk and contracted against all K local z slabs — zero
+    collectives, same as the single-client op."""
+    _check(spec, ms)
+    a = spec.major_axis
+    loc_moved = (spec.shape[a] // ms,
+                 *spec.shape[:a], *spec.shape[a + 1:])
+
+    def local(zl):  # (K, n_loc)
+        k = zl.shape[0]
+        zf = zl.astype(jnp.float32)
+        nc = _num_chunks(spec, k)
+        rpc = -(-spec.m_pad_loc // nc)
+
+        def one(c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            return jax.lax.map(
+                lambda z: jnp.sum(vals * z[gidx], axis=-1), zf
+            )  # (K, rpc)
+
+        w = jax.lax.map(one, jnp.arange(nc))  # (nc, K, rpc)
+        w = jnp.moveaxis(w, 1, 0).reshape(k, -1)[:, : spec.m_blk]
+        return jnp.moveaxis(w.reshape(k, *loc_moved), 1, a + 1)
+
+    return _shard_map(local, P(None, AXIS), _out_spec_b(spec))(
+        Z.astype(jnp.float32)
+    )
 
 
 def sharded_grad_z(spec: QSpec, grad_w, ms: int):
@@ -105,19 +180,46 @@ def sharded_grad_z(spec: QSpec, grad_w, ms: int):
 
         def step(gz, c):
             gidx, vals = _chunk_rows(spec, c, rpc)
-            rows = jnp.minimum(c * rpc + jnp.arange(rpc), spec.m_pad_loc - 1)
-            gc = g_pad[rows]
-            # clamped tail rows repeat row m_pad_loc-1: zero their updates
-            live = (c * rpc + jnp.arange(rpc)) < spec.m_pad_loc
-            upd = (vals * (gc * live.astype(jnp.float32))[:, None]
-                   ).reshape(-1)
+            rows, live = _chunk_live_rows(spec, c, rpc)
+            upd = (vals * (g_pad[rows] * live)[:, None]).reshape(-1)
             return gz.at[gidx.reshape(-1)].add(upd), None
 
         gz, _ = jax.lax.scan(step, jnp.zeros((nloc,), jnp.float32),
                              jnp.arange(nc))
         return gz
 
-    return jax.shard_map(
-        local, in_specs=_out_spec(spec), out_specs=P(AXIS),
-        axis_names={AXIS}, check_vma=False,
-    )(grad_w)
+    return _shard_map(local, _out_spec(spec), P(AXIS))(grad_w)
+
+
+def sharded_grad_z_batched(spec: QSpec, grad_W, ms: int):
+    """Q^T g per client; ``grad_W``: (K, *spec.shape); returns (K, n)
+    f32 sharded P(None, 'model').  One generation of the chunk
+    indices/values feeds all K per-client scatter-adds."""
+    _check(spec, ms)
+
+    def local(gl):  # (K, local tensor block)
+        k = gl.shape[0]
+        gm = jnp.moveaxis(gl, spec.major_axis + 1, 1).reshape(k, -1)
+        g_pad = jnp.pad(gm.astype(jnp.float32),
+                        ((0, 0), (0, spec.m_pad_loc - spec.m_blk)))
+        nc = _num_chunks(spec, k)
+        rpc = -(-spec.m_pad_loc // nc)
+        nloc = spec.nw_loc * spec.window
+
+        def step(gz, c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            rows, live = _chunk_live_rows(spec, c, rpc)
+            flat = gidx.reshape(-1)
+
+            def one(args):
+                gz_k, g_k = args
+                upd = (vals * (g_k[rows] * live)[:, None]).reshape(-1)
+                return gz_k.at[flat].add(upd)
+
+            return jax.lax.map(one, (gz, g_pad)), None
+
+        gz, _ = jax.lax.scan(step, jnp.zeros((k, nloc), jnp.float32),
+                             jnp.arange(nc))
+        return gz
+
+    return _shard_map(local, _out_spec_b(spec), P(None, AXIS))(grad_W)

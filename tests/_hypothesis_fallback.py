@@ -1,0 +1,86 @@
+"""Tiny deterministic stand-in for `hypothesis` when it isn't installed.
+
+The test modules do ``try: from hypothesis import ... except
+ImportError: from _hypothesis_fallback import ...`` so property tests
+still run (with fixed-seed random examples and no shrinking) on a bare
+interpreter.  Install the real thing via ``pip install -r
+requirements-dev.txt`` to get shrinking, the example database, and the
+full strategy library.
+
+Only the surface these tests use is implemented: ``given`` (kwargs
+form), ``settings(max_examples=, deadline=)``, and the strategies
+``integers``, ``sampled_from``, ``floats``, ``booleans``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, floats=floats,
+    booleans=booleans,
+)
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    del deadline
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest must not see the drawn parameters as fixtures: present
+        # the signature with them stripped, and drop __wrapped__ so
+        # introspection doesn't recover the original one.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs
+        ])
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

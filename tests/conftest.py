@@ -1,0 +1,20 @@
+"""Force a 4-device CPU topology before jax initializes.
+
+The sharding-major reconstruction (kernels/qz_sharded.py) is a
+shard_map over a 'model' mesh axis; with a single CPU device it is
+untestable.  Setting the flag here (conftest is imported before any
+test module, hence before jax backend init) lets the suite exercise
+the real distributed path — tests that need it build a mesh via
+``jax.make_mesh((4,), ("model",))`` and skip if fewer devices exist.
+"""
+
+import os
+
+# respect an explicit device count the developer already set
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()

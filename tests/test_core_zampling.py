@@ -6,8 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # vendored fallback: fixed-seed examples, no shrinking
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.core import zonotope
 from repro.core.qspec import make_qspec, row_indices, row_values
@@ -65,6 +69,7 @@ class TestReconstruct:
         got = np.asarray(reconstruct_ref(spec, jnp.asarray(z))).reshape(-1)
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
+    @pytest.mark.slow
     def test_kaiming_he_variance_of_w(self):
         # Lemma 2.1: w_i -> N(0, E[p^2] * 6 / fan_in); E[p^2]=1/3 for U(0,1)
         fan_in = 128
@@ -85,6 +90,7 @@ class TestReconstruct:
         np.testing.assert_allclose(np.asarray(g), q.T @ np.asarray(v),
                                    rtol=1e-4, atol=1e-4)
 
+    @pytest.mark.slow
     @settings(max_examples=15, deadline=None)
     @given(
         m=st.integers(40, 2000),

@@ -10,14 +10,19 @@ from repro.kernels import ops
 from repro.kernels.qz_reconstruct import qz_reconstruct_bwd, qz_reconstruct_fwd
 from repro.kernels.ref import grad_z_ref, reconstruct_ref
 
-SWEEP = [
+# Interpret-mode sweeps are expensive (each case compiles a fresh
+# Pallas interpreter program).  A 2-case FAST subset runs by default;
+# the full grid is @slow (run with `-m ""` or `-m slow`).
+SWEEP_FAST = [
     # (shape, compression, d, window)
     ((512,), 2.0, 4, 64),
-    ((1000,), 4.0, 1, 128),
     ((64, 96), 8.0, 8, 256),
+]
+SWEEP_SLOW = [
+    ((1000,), 4.0, 1, 128),
     ((3, 40, 50), 3.0, 5, 32),
-    ((2048, 17), 32.0, 8, 512),
-    ((striped := 4096,), 1.0, 2, 512),
+    ((1024, 17), 32.0, 8, 512),
+    ((2048,), 1.0, 2, 512),
 ]
 
 
@@ -27,7 +32,13 @@ def _mk(shape, c, d, window, seed=11):
                       seed=seed)
 
 
-@pytest.mark.parametrize("shape,c,d,window", SWEEP)
+def _sweep_params():
+    return [pytest.param(*case) for case in SWEEP_FAST] + [
+        pytest.param(*case, marks=pytest.mark.slow) for case in SWEEP_SLOW
+    ]
+
+
+@pytest.mark.parametrize("shape,c,d,window", _sweep_params())
 def test_pallas_fwd_matches_ref(shape, c, d, window):
     spec = _mk(shape, c, d, window)
     z = (np.random.RandomState(0).rand(spec.n) < 0.5).astype(np.float32)
@@ -36,7 +47,7 @@ def test_pallas_fwd_matches_ref(shape, c, d, window):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("shape,c,d,window", SWEEP)
+@pytest.mark.parametrize("shape,c,d,window", _sweep_params())
 def test_pallas_bwd_matches_ref(shape, c, d, window):
     spec = _mk(shape, c, d, window)
     g = np.random.RandomState(1).randn(spec.m).astype(np.float32)
@@ -45,7 +56,10 @@ def test_pallas_bwd_matches_ref(shape, c, d, window):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("bm", [64, 256, 1024])
+@pytest.mark.parametrize(
+    "bm", [64, pytest.param(256, marks=pytest.mark.slow),
+           pytest.param(1024, marks=pytest.mark.slow)]
+)
 def test_pallas_block_size_invariance(bm):
     spec = _mk((900, 30), 16.0, 8, 128)
     z = (np.random.RandomState(2).rand(spec.n) < 0.4).astype(np.float32)
@@ -56,7 +70,10 @@ def test_pallas_block_size_invariance(bm):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "dtype", [jnp.float32, pytest.param(jnp.bfloat16,
+                                        marks=pytest.mark.slow)]
+)
 def test_ops_dispatch_dtypes(dtype):
     spec = _mk((64, 80), 4.0, 6, 128)
     z = jnp.asarray((np.random.RandomState(3).rand(spec.n) < 0.5), jnp.float32)

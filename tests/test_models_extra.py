@@ -5,8 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # vendored fallback: fixed-seed examples, no shrinking
+    from _hypothesis_fallback import given, settings
+    from _hypothesis_fallback import strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.core.bitpack import pack_mask, packed_len, unpack_mask

@@ -46,6 +46,7 @@ def _zsetup(compression=2.0, d=5, seed=0):
 
 
 class TestLocalZampling:
+    @pytest.mark.slow
     def test_learns_synthetic_task(self, dataset):
         zspecs, state = _zsetup()
         batches = (
@@ -104,6 +105,7 @@ class TestFederated:
             assert v.min() >= 0 and v.max() <= 1
             np.testing.assert_allclose(v * K, np.round(v * K), atol=1e-5)
 
+    @pytest.mark.slow
     def test_federated_training_improves(self, dataset):
         zspecs, state = _zsetup(compression=2.0)
         K, E, B = 10, 40, 64
