@@ -125,14 +125,17 @@ def bench_federated_round(full=False):
 
 def _merge_bench_root(rows):
     """Merge benchmark rows into BENCH_reconstruct.json at the repo
-    root, keyed by (bench, K) — the perf trajectory across PRs."""
+    root, keyed by (bench, K, strategy) — the perf trajectory across
+    PRs (strategy is None for the reconstruction rows)."""
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_reconstruct.json")
+
+    def _key(r):
+        return (r.get("bench"), r.get("K"), r.get("strategy"))
+
     try:
         with open(path) as f:
-            kept = {
-                (r.get("bench"), r.get("K")): r for r in json.load(f)
-            }
+            kept = {_key(r): r for r in json.load(f)}
     except FileNotFoundError:
         kept = {}
     except (OSError, ValueError, AttributeError, TypeError) as e:
@@ -142,10 +145,71 @@ def _merge_bench_root(rows):
         kept = {}
     for r in rows:
         if isinstance(r, dict) and "bench" in r:
-            kept[(r.get("bench"), r.get("K"))] = r
+            kept[_key(r)] = r
     with open(path, "w") as f:
         json.dump(list(kept.values()), f, indent=2, default=str)
     return path
+
+
+def bench_wire(full=False):
+    """Wire-format transports on a stacked client mask slab: time the
+    three aggregation strategies, check bit-exactness, and report the
+    exact wire bytes each puts on the network (comm.metering).
+
+    Rows land in experiments/results/wire.json AND are merged into
+    BENCH_reconstruct.json at the repo root keyed by
+    (bench, K, strategy) — the CI staleness gate (scripts/ci.sh)
+    asserts the committed JSON carries all three strategies.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.metering import mask_uplink_bytes
+    from repro.comm.protocol import get_transport, transport_names
+
+    # n is FIXED across quick/--full runs: the rows are keyed by
+    # (bench, K, strategy) in BENCH_reconstruct.json, so a different n
+    # would silently overwrite the cross-PR baseline with an
+    # incomparable problem size (--full only raises iteration counts)
+    n = 1 << 20
+    rows = []
+    for K in (10, 32):
+        Z = jnp.asarray(
+            (np.random.RandomState(0).rand(K, n) < 0.5), jnp.float32
+        )
+        names = transport_names(include_aliases=False)
+        outs = {
+            name: np.asarray(
+                jax.jit(get_transport(name).aggregate_stacked)(Z)
+            )
+            for name in names
+        }
+        for name in names:
+            np.testing.assert_array_equal(
+                outs[name], outs["mean_f32"],
+                err_msg=f"{name} not bit-exact vs mean_f32",
+            )
+        for name in names:
+            t = get_transport(name)
+            f = jax.jit(t.aggregate_stacked)
+            f(Z).block_until_ready()
+            iters = 20 if full else 5
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                f(Z).block_until_ready()
+            us = (time.perf_counter() - t0) / iters * 1e6
+            up = mask_uplink_bytes(t, n)
+            f32_up = mask_uplink_bytes(get_transport("mean_f32"), n)
+            rows.append({
+                "bench": "wire_aggregate", "strategy": name, "K": K,
+                "n": n, "us": us,
+                "uplink_bytes_per_client": up,
+                "uplink_vs_f32": up / f32_up,
+            })
+            _emit(f"wire_aggregate_{name}_K{K}", us,
+                  f"up={up}B;vs_f32={up / f32_up:.4f}")
+    return rows
 
 
 def bench_table1(full=False):
@@ -239,9 +303,26 @@ def bench_roofline(full=False):
     return rows
 
 
+def bench_wire_formats(full=False):
+    """The end-to-end wire-format table (experiments.run_wire_formats):
+    a real federated round per transport, bit-exactness asserted."""
+    from repro.experiments import run_wire_formats
+
+    t0 = time.perf_counter()
+    rows = run_wire_formats(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("wire_formats", us,
+              f"{r['strategy']};up={r['uplink_bytes_per_client']:.0f}B"
+              f";vs_f32={r['uplink_vs_f32']:.4f}")
+    return rows
+
+
 BENCHES = {
     "kernel": lambda full: bench_kernel_reconstruct(),
     "fedround": bench_federated_round,
+    "wire": bench_wire,
+    "wire_formats": bench_wire_formats,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig4": bench_fig4,
@@ -264,7 +345,7 @@ def main() -> None:
         try:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
-            if name in ("kernel", "fedround"):
+            if name in ("kernel", "fedround", "wire"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

@@ -3,7 +3,14 @@
 10 clients, MNISTFC-family network, m/n = 8: each round the clients
 upload n BITS (the sampled masks) instead of 32m float bits — a 256x
 reduction — and the server averages masks into the new probability
-vector.
+vector.  ``--aggregate`` picks the wire transport (mean_f32 baseline,
+psum_u32 popcount psum, allgather_packed raw lanes; all bit-exact
+against each other — only the measured bytes differ).
+
+Rounds run through the ``federated_fit`` scan driver: the loop below
+compiles ONE (block, K, E)-shaped program and re-dispatches it per
+eval block, instead of one dispatch (and, across (K, E) changes, one
+compile) per round.
 
   PYTHONPATH=src python examples/federated_mnistfc.py [--rounds 25]
 """
@@ -12,19 +19,25 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.comm.metering import round_wire_report, wire_table
 from repro.core import (
-    FederatedConfig, ZamplingConfig, build_specs, federated_round, init_state,
+    FederatedConfig, ZamplingConfig, build_specs, init_state,
 )
 from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
 from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_accuracy, mlp_loss
-from repro.train import evaluate
+from repro.train import evaluate, federated_fit
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=25)
 ap.add_argument("--clients", type=int, default=10)
 ap.add_argument("--local-steps", type=int, default=30)
 ap.add_argument("--compression", type=float, default=8.0)
+ap.add_argument("--aggregate", default="psum_u32",
+                help="wire transport: mean_f32 | psum_u32 | allgather_packed")
+ap.add_argument("--block", type=int, default=5,
+                help="rounds per compiled scan block (and eval period)")
 args = ap.parse_args()
 
 ds = make_teacher_dataset(n_train=8000, n_test=1500, seed=0)
@@ -33,34 +46,48 @@ zspecs = build_specs(template, ZamplingConfig(
     compression=args.compression, d=10, window=128, min_size=128))
 state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
 
-bits = zspecs.comm_bits_per_round()
-print(f"m={zspecs.m_total} n={zspecs.n_total}; client upload "
-      f"{bits['client_up']/8/1024:.1f} KiB/round vs naive "
-      f"{bits['naive_client_up']/8/1024:.1f} KiB "
-      f"({bits['naive_client_up']/bits['client_up']:.0f}x less)")
+rep = round_wire_report(zspecs, args.aggregate, args.clients)
+print(f"m={zspecs.m_total} n={zspecs.n_total}; transport={rep['transport']}: "
+      f"client upload {rep['uplink_bytes_per_client']/1024:.1f} KiB/round vs "
+      f"naive f32 {rep['naive_uplink_bytes_per_client']/1024:.1f} KiB "
+      f"({rep['naive_uplink_bytes_per_client']/rep['uplink_bytes_per_client']:.0f}x less)")
+for row in wire_table(zspecs, args.clients):
+    print(f"  {row['strategy']:>17}: {row['uplink_bytes_per_client']/1024:8.1f}"
+          f" KiB/client/round ({row['uplink_vs_f32']:.4f}x of f32)")
 
 clients = iid_client_split(ds, args.clients)
 stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
 fcfg = FederatedConfig(num_clients=args.clients,
-                       local_steps=args.local_steps, local_lr=0.5)
+                       local_steps=args.local_steps, local_lr=0.5,
+                       aggregate=args.aggregate)
 acc = jax.jit(lambda p: mlp_accuracy(
     p, {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}))
 
 
+# ONE compile for the whole run: every block has the same
+# (block, K, E, batch) shape, so this traces exactly once.
 @jax.jit
-def round_fn(state, batch, key):
-    return federated_round(zspecs, state, mlp_loss, batch, key, fcfg)
+def fit_block(state, batches, key):
+    return federated_fit(zspecs, state, mlp_loss, batches, key, fcfg)
 
 
 key = jax.random.PRNGKey(0)
-for r in range(args.rounds):
-    xs, ys = next(stream)
+done = 0
+while done < args.rounds:
+    # a tail block smaller than --block recompiles once for its shape
+    r = min(args.block, args.rounds - done)
+    xs, ys = zip(*(next(stream) for _ in range(r)))
     key, sub = jax.random.split(key)
-    state, met = round_fn(state, {"x": jnp.asarray(xs), "y": jnp.asarray(ys)},
-                          sub)
-    if (r + 1) % 5 == 0:
-        ms, std = evaluate(zspecs, state, acc, jax.random.PRNGKey(3),
-                           n_samples=10)
-        print(f"round {r+1:3d}: loss={met['loss']:.3f} "
-              f"sampled-acc={ms:.3f}+-{std:.3f}")
+    state, mets = fit_block(
+        state,
+        {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))},
+        sub,
+    )
+    done += r
+    ms, std = evaluate(zspecs, state, acc, jax.random.PRNGKey(3),
+                       n_samples=10)
+    losses = np.asarray(mets["loss"])
+    print(f"round {done:3d}: loss={losses[-1]:.3f} "
+          f"(block mean {losses.mean():.3f}) "
+          f"sampled-acc={ms:.3f}+-{std:.3f}")
 print("done — every upload in that run was a binary mask, never a float.")

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
-# Fast CI gate: tier-1 test subset + the reconstruction perf baseline.
+# Fast CI gate: tier-1 test subset + the reconstruction/wire perf baselines.
 #
 #   bash scripts/ci.sh
 #
 # 1. runs the fast tier-1 tests (pytest.ini deselects @slow by default;
 #    run `python -m pytest -m "" -q` for the full suite);
-# 2. runs the kernel + batched-federated reconstruction benchmarks and
-#    merges the rows into BENCH_reconstruct.json at the repo root, so
-#    every PR leaves a perf trajectory the next one can diff against.
+# 2. fails if the COMMITTED BENCH_reconstruct.json is stale — missing
+#    the wire rows (all three transport strategies with byte
+#    accounting) that the wire benchmark now emits — BEFORE
+#    regenerating anything, so a PR that runs benchmarks locally but
+#    never commits the refreshed baseline is caught;
+# 3. runs the kernel + batched-federated reconstruction benchmarks AND
+#    the wire-format transport benchmark, merging the rows into
+#    BENCH_reconstruct.json at the repo root, so every PR leaves a perf
+#    trajectory the next one can diff against.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,16 +22,40 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 (fast subset) =="
 python -m pytest -x -q
 
-echo "== reconstruction benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround
+echo "== wire staleness gate (committed BENCH_reconstruct.json) =="
+python - <<'EOF'
+import json
+import sys
+
+rows = json.load(open("BENCH_reconstruct.json"))
+REQUIRED_STRATEGIES = {"mean_f32", "psum_u32", "allgather_packed"}
+REQUIRED_KEYS = {"us", "uplink_bytes_per_client", "uplink_vs_f32", "K", "n"}
+wire = [r for r in rows if r.get("bench") == "wire_aggregate"]
+seen = {r.get("strategy") for r in wire}
+missing = REQUIRED_STRATEGIES - seen
+bad = [r for r in wire if not REQUIRED_KEYS <= set(r)]
+if missing or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: missing wire strategies "
+             f"{sorted(missing)}; rows missing keys: {bad}. "
+             f"Run `python -m benchmarks.run --only wire` and commit.")
+print(f"  ok: {len(wire)} wire rows, strategies {sorted(seen)}")
+EOF
+
+echo "== reconstruction + wire benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,wire
 
 echo "== perf baseline =="
 python - <<'EOF'
 import json
+
 rows = json.load(open("BENCH_reconstruct.json"))
 for r in rows:
     if r.get("bench") == "federated_round_reconstruct":
         print(f"  K={r['K']:>3}: vmap={r['vmap_us']/1e3:8.1f}ms "
               f"batched={r['batched_us']/1e3:8.1f}ms "
               f"speedup={r['speedup']:.2f}x")
+    elif r.get("bench") == "wire_aggregate":
+        print(f"  wire {r['strategy']:>17} K={r['K']:>3}: "
+              f"{r['us']/1e3:8.1f}ms  up={r['uplink_bytes_per_client']:>10}B "
+              f"({r['uplink_vs_f32']:.4f}x f32)")
 EOF

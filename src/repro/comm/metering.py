@@ -1,0 +1,92 @@
+"""Exact wire accounting: bytes on the network per federated round.
+
+Analytic, not sampled — the byte counts are a pure function of the
+spec set and the transport, and they meter the PROTOCOL: what one
+client uploads to the aggregator (uint32 lane padding included, unlike
+the idealized ``n bits`` of the paper's Table 1).  One caveat for
+``psum_u32``: XLA has no sub-word all-reduce, so in the shard_map
+SIMULATION its psum operand is the unpacked uint32 vector — the
+metered packed bytes describe the client upload a bandwidth-optimal
+reduction would move, not that simulated operand's width.
+``allgather_packed`` moves exactly the metered lanes end to end, in
+simulation too.
+
+Per round, per client:
+
+  uplink    = sum over reparametrized tensors of the transport's mask
+              wire bytes  +  f32 bytes for the dense leaves (norms /
+              biases are trained locally and averaged too);
+  downlink  = f32 score vector (the server's p(t) broadcast)  +  the
+              same dense leaves.
+
+``round_wire_report`` feeds the round metrics in ``core.federated``;
+``wire_table`` feeds the experiment tables and ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .protocol import Transport, get_transport, resolve_transport, transport_names
+
+_F32_BYTES = 4
+
+
+def mask_uplink_bytes(transport: Transport, n: int) -> int:
+    """Exact wire bytes for one client's n-coordinate mask upload."""
+    return -(-transport.uplink_bits_per_client(n) // 8)
+
+
+def round_wire_report(zspecs, aggregate: str, num_clients: int,
+                      mode: str = "sample") -> Dict[str, float]:
+    """Exact per-round byte counts for one strategy.
+
+    ``zspecs``: anything with ``.specs`` ({path: spec with .n}),
+    ``.n_total``, ``.m_total`` and ``.dense_total`` (ZamplingSpecs).
+    Values are python floats (exact for any realistic byte count) —
+    int32 would overflow past 2 GiB.  Note that a JITTED function
+    returning them (round metrics) casts to f32: exact below 16 MiB,
+    ≤ 2^-24 relative rounding above; compare against this function's
+    output with a tolerance at that scale.
+    """
+    t = resolve_transport(aggregate, mode)
+    mask_up = sum(mask_uplink_bytes(t, s.n) for s in zspecs.specs.values())
+    dense = _F32_BYTES * zspecs.dense_total
+    up_client = mask_up + dense
+    down_client = _F32_BYTES * zspecs.n_total + dense
+    return {
+        "transport": t.name,
+        "uplink_bytes_per_client": float(up_client),
+        "uplink_bytes_round": float(up_client * num_clients),
+        "downlink_bytes_per_client": float(down_client),
+        "naive_uplink_bytes_per_client": float(
+            _F32_BYTES * zspecs.m_total + dense
+        ),
+    }
+
+
+def wire_table(zspecs, num_clients: int) -> List[Dict]:
+    """One row per registered strategy — the measured-bytes table for
+    ``experiments.paper`` and the wire benchmark."""
+    baseline = round_wire_report(zspecs, "mean_f32", num_clients)
+    rows = []
+    for name in transport_names(include_aliases=False):
+        rep = round_wire_report(zspecs, name, num_clients)
+        rows.append({
+            "bench": "wire_format",
+            "strategy": name,
+            "K": num_clients,
+            "n_total": zspecs.n_total,
+            "m_total": zspecs.m_total,
+            **rep,
+            "uplink_vs_f32": rep["uplink_bytes_per_client"]
+            / baseline["uplink_bytes_per_client"],
+            "uplink_vs_naive": rep["uplink_bytes_per_client"]
+            / rep["naive_uplink_bytes_per_client"],
+        })
+    return rows
+
+
+__all__ = [
+    "mask_uplink_bytes", "round_wire_report", "wire_table", "get_transport",
+]

@@ -1,0 +1,173 @@
+"""Transport/Aggregator strategies for the federated mask upload.
+
+The server update is always ``p(t+1) = (1/K) sum_k z^(k)`` — what
+differs between strategies is the WIRE FORMAT of the K client
+contributions and where the unpack happens:
+
+ - ``mean_f32``         the baseline: clients ship the {0,1} mask as
+   f32 (4 bytes/coordinate) and the server psums floats — today's
+   data-parallel-shaped traffic;
+ - ``psum_u32``         clients bitpack ``z`` into uint32 lanes
+   (n bits + padding on the wire) and the reduction is an integer
+   psum of the per-coordinate bit counts — a lane-wise popcount
+   accumulated across the client axis;
+ - ``allgather_packed`` clients bitpack and the server all-gathers the
+   raw lanes (K·n bits total), then unpacks and averages — the
+   paper's literal upload-n-bits protocol, and the strategy string
+   that ``FederatedConfig.aggregate`` always promised.
+
+All three are bit-exact against each other: the vote counts are exact
+small integers in every representation, and every strategy performs
+the same final ``counts / K`` f32 division.  Strategies assume BINARY
+masks; ``resolve_transport`` falls back to ``mean_f32`` for continuous
+(probability-valued) uploads, which cannot be bitpacked.
+
+Each strategy exposes both execution paths of the federated round:
+``aggregate_stacked`` for the vmap simulation (a stacked (K, n) slab on
+one host) and ``aggregate_collective`` for the ``shard_map`` production
+path where the client axis is a mesh axis and the collective IS the
+network.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bitpack import pack_mask, packed_len, packed_popcount_sum, unpack_mask
+from .shardmap import axis_size
+
+
+class Transport:
+    """One wire-format strategy. Subclasses define the three hooks."""
+
+    name: str = "?"
+
+    def uplink_bits_per_client(self, n: int) -> int:
+        """Exact bits one client puts on the wire for an n-coord mask."""
+        raise NotImplementedError
+
+    def aggregate_stacked(self, Z):
+        """(K, n) stacked client masks -> (n,) f32 mean."""
+        raise NotImplementedError
+
+    def aggregate_collective(self, z, axis_names: Sequence[str]):
+        """Per-client (n,) mask -> replicated (n,) f32 mean, via
+        collectives over ``axis_names`` (call inside shard_map)."""
+        raise NotImplementedError
+
+
+class MeanF32(Transport):
+    """Baseline: f32 masks, float psum — 32 bits/coordinate uplink."""
+
+    name = "mean_f32"
+
+    def uplink_bits_per_client(self, n: int) -> int:
+        return 32 * n
+
+    def aggregate_stacked(self, Z):
+        return jnp.sum(Z.astype(jnp.float32), axis=0) / Z.shape[0]
+
+    def aggregate_collective(self, z, axis_names):
+        names = tuple(axis_names)
+        return jax.lax.psum(z.astype(jnp.float32), names) / axis_size(names)
+
+
+def _popcount_mean(Z):
+    """Stacked (K, n) masks -> (n,) f32 mean via the packed wire: both
+    bitpacked strategies share this exact reduction, so a change to
+    one cannot silently break bit-exactness of the other."""
+    packed = pack_mask(Z)  # (K, L) — the wire representation
+    counts = packed_popcount_sum(packed, Z.shape[-1])
+    return counts.astype(jnp.float32) / Z.shape[0]
+
+
+class PsumU32(Transport):
+    """Bitpacked wire + integer psum of per-coordinate bit counts."""
+
+    name = "psum_u32"
+
+    def uplink_bits_per_client(self, n: int) -> int:
+        return 32 * packed_len(n)
+
+    def aggregate_stacked(self, Z):
+        return _popcount_mean(Z)
+
+    def aggregate_collective(self, z, axis_names):
+        # XLA has no sub-word all-reduce, so the SIMULATED collective
+        # operand is the unpacked uint32 vector; the metered uplink is
+        # the protocol's packed client upload (each contribution is
+        # losslessly n bits), not this operand's width — see
+        # comm.metering.  allgather_packed keeps raw lanes on the wire
+        # end to end.
+        names = tuple(axis_names)
+        packed = pack_mask(z)  # (L,) uint32 — the client's upload
+        bits = unpack_mask(packed, z.shape[-1], dtype=jnp.uint32)
+        counts = jax.lax.psum(bits, names)
+        return counts.astype(jnp.float32) / axis_size(names)
+
+
+class AllgatherPacked(Transport):
+    """Bitpacked wire, raw lanes all-gathered; server-side unpack."""
+
+    name = "allgather_packed"
+
+    def uplink_bits_per_client(self, n: int) -> int:
+        return 32 * packed_len(n)
+
+    def aggregate_stacked(self, Z):
+        # the server's view after the gather: K packed lanes to reduce
+        return _popcount_mean(Z)
+
+    def aggregate_collective(self, z, axis_names):
+        names = tuple(axis_names)
+        k = axis_size(names)
+        packed = pack_mask(z)  # (L,) uint32 on the wire
+        lanes = jax.lax.all_gather(packed, names, axis=0)  # (K, L)
+        counts = packed_popcount_sum(lanes.reshape(k, -1), z.shape[-1])
+        return counts.astype(jnp.float32) / k
+
+
+_REGISTRY: Dict[str, Transport] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_transport(transport: Transport,
+                       aliases: Tuple[str, ...] = ()) -> Transport:
+    """Add a strategy (and optional alias names) to the registry."""
+    _REGISTRY[transport.name] = transport
+    for a in aliases:
+        _ALIASES[a] = transport.name
+    return transport
+
+
+def transport_names(include_aliases: bool = True) -> List[str]:
+    names = sorted(_REGISTRY)
+    if include_aliases:
+        names += sorted(_ALIASES)
+    return names
+
+
+def get_transport(name: str) -> Transport:
+    canonical = _ALIASES.get(name, name)
+    if canonical not in _REGISTRY:
+        raise ValueError(
+            f"unknown transport {name!r}; registered: "
+            f"{', '.join(transport_names())}"
+        )
+    return _REGISTRY[canonical]
+
+
+def resolve_transport(aggregate: str, mode: str = "sample") -> Transport:
+    """Strategy for a round: bit transports need binary masks, so
+    continuous (probability-valued) uploads fall back to ``mean_f32``."""
+    if mode != "sample":
+        return get_transport("mean_f32")
+    return get_transport(aggregate)
+
+
+register_transport(MeanF32(), aliases=("mean",))
+register_transport(PsumU32())
+register_transport(AllgatherPacked())

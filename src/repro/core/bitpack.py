@@ -1,31 +1,15 @@
-"""Bit-packing of binary masks for communication.
+"""Deprecated location — bitpacking moved to ``repro.comm.bitpack``.
 
-The federated protocol uploads ``z ∈ {0,1}^n`` — n *bits* on the wire.
-JAX has no 1-bit dtype, so we pack 32 mask bits per ``uint32`` lane;
-the packed representation is what crosses the network (all-gather over
-the client axis), giving the paper's full 32x-over-uint8 saving.
+This shim keeps old imports working; the real implementation (now
+batched over leading client axes, plus the packed-popcount reduction)
+lives in the wire-format transport layer.
 """
 
-from __future__ import annotations
+from ..comm.bitpack import (  # noqa: F401
+    pack_mask,
+    packed_len,
+    packed_popcount_sum,
+    unpack_mask,
+)
 
-import jax.numpy as jnp
-
-
-def packed_len(n: int) -> int:
-    return (n + 31) // 32
-
-
-def pack_mask(z):
-    """float/bool {0,1} mask (n,) -> uint32 (ceil(n/32),)."""
-    n = z.shape[0]
-    pad = packed_len(n) * 32 - n
-    bits = jnp.pad(z.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
-
-
-def unpack_mask(packed, n: int):
-    """uint32 (ceil(n/32),) -> float32 mask (n,)."""
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (packed[:, None] >> shifts) & jnp.uint32(1)
-    return bits.reshape(-1)[:n].astype(jnp.float32)
+__all__ = ["pack_mask", "packed_len", "packed_popcount_sum", "unpack_mask"]

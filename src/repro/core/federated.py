@@ -7,20 +7,35 @@ One round:
   3. client k: p_new = f(s); z_new ~ Bern(p_new)  (n BITS on the wire)
   4. server: p(t+1) = mean_k z_new^(k)
 
+Step 3/4 — what actually crosses the network — is delegated to the
+wire-format transport layer (``repro.comm``): ``FederatedConfig
+.aggregate`` names a registered ``comm.protocol.Transport`` strategy
+(``mean_f32`` f32 baseline, ``psum_u32`` integer popcount psum of
+bitpacked lanes, ``allgather_packed`` raw-lane all-gather; ``mean`` is
+a backwards-compatible alias of ``mean_f32``).  All strategies are
+bit-exact against each other; they differ only in wire bytes, which
+``comm.metering`` reports exactly in every round's metrics
+(``uplink_bytes_per_client`` etc.).  Continuous-mode rounds upload
+probabilities, not bits, and always use ``mean_f32``.
+
 Two execution paths with identical math:
   * ``federated_round``        — vmap over a stacked client axis
     (CPU simulation; the paper's 10-client experiments).  The
     ``w = Q z`` inside each client's forward/backward does NOT pay
     K-times Q regeneration: ``kernels.ops`` installs custom_vmap rules
     on the reconstruction custom_vjp, so this vmap lowers onto the
-    natively-batched kernels (one hash-RNG generation, K-column
-    contraction) — see ``kernels.ops.reconstruct_batched``
+    natively-batched kernels — see ``kernels.ops.reconstruct_batched``.
+    Aggregation uses ``Transport.aggregate_stacked`` on the (K, n)
+    mask slab.
   * ``sharded_client_update``  — the piece that runs inside
     ``shard_map`` on the production mesh, where the client axis IS the
-    ``data`` mesh axis and step 4 is a ``psum`` of the (uint8 or
-    bit-packed) masks.  This is the paper's communication story mapped
-    onto JAX collectives: the mask psum/all-gather replaces the fp32
-    gradient all-reduce of standard data parallelism.
+    ``data`` mesh axis and aggregation is
+    ``Transport.aggregate_collective``: the psum / all-gather of
+    (bit-packed) masks replaces the f32 gradient all-reduce of
+    standard data parallelism.
+
+Multi-round driving (one compile per (K, E) shape, rounds carried
+through ``lax.scan``) lives in ``train.fit.federated_fit``.
 """
 
 from __future__ import annotations
@@ -31,6 +46,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from ..comm.metering import round_wire_report
+from ..comm.protocol import resolve_transport, transport_names
 from ..optim import Optimizer, sgd
 from .sampling import clip_probs, sample_mask, sample_mask_st
 from .zampling import ZamplingSpecs, weights_from_masks
@@ -44,7 +61,14 @@ class FederatedConfig:
     local_steps: int = 1  # "epochs" per round in the paper (up to 100)
     local_lr: float = 0.1
     mode: str = "sample"  # sample | continuous (ContinuousModel baseline)
-    aggregate: str = "mean"  # mean (psum) | allgather_packed
+    aggregate: str = "mean"  # a registered comm.protocol transport name
+
+    def __post_init__(self):
+        if self.aggregate not in transport_names():
+            raise ValueError(
+                f"unknown aggregate strategy {self.aggregate!r}; "
+                f"registered transports: {', '.join(transport_names())}"
+            )
 
 
 def _client_masks(zspecs: ZamplingSpecs, scores, key, mode):
@@ -116,6 +140,32 @@ def local_update(
     return z_new, trainable["dense"], jnp.mean(losses)
 
 
+# byte-count keys every round's metrics dict carries (comm.metering);
+# launch code sizing shard_map out_specs keys off the metrics tree uses
+# this instead of hardcoding {"loss"}
+WIRE_METRIC_KEYS = (
+    "uplink_bytes_per_client",
+    "uplink_bytes_round",
+    "downlink_bytes_per_client",
+    "naive_uplink_bytes_per_client",
+)
+
+
+def _wire_metrics(zspecs: ZamplingSpecs, cfg: FederatedConfig,
+                  num_clients: Optional[int] = None):
+    """Exact byte counts for this round's traffic (static per config).
+
+    ``num_clients`` overrides ``cfg.num_clients`` on the sharded path,
+    where the true client count is the mesh axis size.
+    """
+    rep = round_wire_report(
+        zspecs, cfg.aggregate,
+        cfg.num_clients if num_clients is None else num_clients,
+        mode=cfg.mode,
+    )
+    return {k: rep[k] for k in WIRE_METRIC_KEYS}
+
+
 def federated_round(
     zspecs: ZamplingSpecs,
     state: Dict[str, Any],
@@ -126,17 +176,19 @@ def federated_round(
     opt: Optional[Optimizer] = None,
 ):
     """Full round over K stacked clients (vmap). Returns (state', metrics)."""
+    transport = resolve_transport(cfg.aggregate, cfg.mode)
     keys = jax.random.split(key, cfg.num_clients)
 
     def one(batches, k):
         return local_update(zspecs, state, loss_fn, batches, k, cfg, opt)
 
     z_all, dense_all, losses = jax.vmap(one)(client_batches, keys)
-    # server aggregation: p(t+1) = mean_k z^(k)
-    new_scores = {p: jnp.mean(z, axis=0) for p, z in z_all.items()}
+    # server aggregation: p(t+1) = mean_k z^(k), via the wire transport
+    new_scores = {p: transport.aggregate_stacked(z) for p, z in z_all.items()}
     new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
     new_state = {"scores": new_scores, "dense": new_dense}
-    return new_state, {"loss": jnp.mean(losses)}
+    metrics = {"loss": jnp.mean(losses), **_wire_metrics(zspecs, cfg)}
+    return new_state, metrics
 
 
 def sharded_client_update(
@@ -154,10 +206,15 @@ def sharded_client_update(
 ):
     """Body to run under ``shard_map``: client id = mesh position.
 
-    The mask aggregation is the ONLY cross-client communication:
-    a psum of {0,1} float masks (lowered to uint8-width traffic by the
-    bitpack hillclimb variant) over the client axes.
+    The mask aggregation is the ONLY cross-client communication; the
+    configured transport decides its wire format — an f32 psum
+    (``mean_f32``), a uint32 popcount psum of bitpacked lanes
+    (``psum_u32``), or an all-gather of the raw packed lanes
+    (``allgather_packed``) over the client axes.
     """
+    from ..comm.shardmap import axis_size
+
+    transport = resolve_transport(cfg.aggregate, cfg.mode)
     idx = sum(
         jax.lax.axis_index(a) * 1_000_003 ** i for i, a in enumerate(axis_names)
     )
@@ -166,18 +223,20 @@ def sharded_client_update(
         zspecs, state, loss_fn, batches, ckey, cfg, opt,
         constraints=constraints, row_sharding=row_sharding,
     )
-    nclients = 1
-    for a in axis_names:
-        nclients *= jax.lax.axis_size(a)
+    nclients = axis_size(axis_names)
     new_scores = {
-        p: jax.lax.psum(z, axis_names) / nclients for p, z in z_new.items()
+        p: transport.aggregate_collective(z, axis_names)
+        for p, z in z_new.items()
     }
-    # psum in f32: XLA:CPU's AllReducePromotion pass aborts on bf16
-    # all-reduces (and f32 is the numerically right accumulator anyway)
+    # dense leaves stay on the f32 psum path: XLA:CPU's
+    # AllReducePromotion pass aborts on bf16 all-reduces (and f32 is
+    # the numerically right accumulator anyway)
     new_dense = jax.tree.map(
         lambda d: (jax.lax.psum(d.astype(jnp.float32), axis_names)
                    / nclients).astype(d.dtype),
         dense_new,
     )
     loss = jax.lax.pmean(loss, axis_names)
-    return {"scores": new_scores, "dense": new_dense}, {"loss": loss}
+    # the mesh axis size, not cfg.num_clients, is the real K here
+    metrics = {"loss": loss, **_wire_metrics(zspecs, cfg, nclients)}
+    return {"scores": new_scores, "dense": new_dense}, metrics

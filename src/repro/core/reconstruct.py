@@ -31,9 +31,17 @@ The contraction strategy is size-dependent (``_BATCH_MAP_THRESHOLD``):
    costs ~ms per iteration in XLA:CPU while-loop form, which at test
    scale (m~16k) swamps the hash savings; the fused form is exactly
    what vmap would emit, minus the K-times hash regeneration.
+
+The crossover point is tuned for XLA:CPU; set the env var
+``REPRO_BATCH_MAP_THRESHOLD`` (elements of hash work ``m_pad * d``) to
+retune on other backends without code edits — it is read at trace
+time, so changing it between jit calls of different shapes takes
+effect immediately (an already-compiled shape keeps its strategy).
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +123,15 @@ def _move_batched(spec: QSpec, w):
 
 # Above this much hash work (m_pad * d elements) the once-per-round
 # regeneration saving beats XLA:CPU's per-iteration lax.map overhead.
+# Default for XLA:CPU; override via REPRO_BATCH_MAP_THRESHOLD (see
+# module docstring) when retuning for TPU/GPU.
 _BATCH_MAP_THRESHOLD = 2_000_000
+
+
+def _batch_map_threshold() -> int:
+    """Effective crossover, env-overridable (read at trace time)."""
+    return int(os.environ.get("REPRO_BATCH_MAP_THRESHOLD",
+                              _BATCH_MAP_THRESHOLD))
 
 
 def reconstruct_batched_ref(spec: QSpec, Z, dtype=None, row_sharding=None):
@@ -126,7 +142,7 @@ def reconstruct_batched_ref(spec: QSpec, Z, dtype=None, row_sharding=None):
     dtype = dtype or Z.dtype
     gidx, vals = _row_plan(spec)
     zf = Z.astype(jnp.float32)
-    if spec.m_pad * spec.d >= _BATCH_MAP_THRESHOLD:
+    if spec.m_pad * spec.d >= _batch_map_threshold():
         w_pad = jax.lax.map(
             lambda z: jnp.sum(vals * jnp.take(z, gidx, axis=0), axis=-1), zf
         )
@@ -145,7 +161,7 @@ def grad_z_batched_ref(spec: QSpec, grad_W, row_sharding=None):
     )
     gidx, vals = _row_plan(spec)
     gidx = gidx.reshape(-1)
-    if spec.m_pad * spec.d >= _BATCH_MAP_THRESHOLD:
+    if spec.m_pad * spec.d >= _batch_map_threshold():
         # unlike the forward gather, the scatter-add batches WELL under
         # vmap on XLA:CPU (lax.map of scatters measured 2x slower, the
         # (K, m_pad*d) one-shot batched scatter 1.5x slower); vmap-of-

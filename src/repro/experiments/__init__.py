@@ -4,10 +4,12 @@ from .paper import (
     run_integrality,
     run_local_compression,
     run_sensitivity,
+    run_wire_formats,
     run_zhou_comparison,
 )
 
 __all__ = [
     "comm_savings_table", "run_federated", "run_integrality",
-    "run_local_compression", "run_sensitivity", "run_zhou_comparison",
+    "run_local_compression", "run_sensitivity", "run_wire_formats",
+    "run_zhou_comparison",
 ]

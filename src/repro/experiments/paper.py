@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..comm.metering import round_wire_report, wire_table
 from ..core import (
     FederatedConfig,
     ZamplingConfig,
@@ -183,12 +184,65 @@ def run_federated(quick: bool = True) -> List[Dict]:
                 curve.append(round(ms, 4))
         ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
                             n_samples=10 if quick else 100)
+        wire = {
+            r_["strategy"]: r_["uplink_bytes_per_client"]
+            for r_ in wire_table(zspecs, K)
+        }
         rows.append({
             "bench": "fig4_federated", "compression": comp,
             "final_sampled_acc": ms, "sampled_std": mstd,
             "curve": curve,
             "client_savings": 32.0 * zspecs.compression,
+            "uplink_bytes_per_client": wire,
         })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Wire formats — measured bytes/round per transport + bit-exactness
+# ---------------------------------------------------------------------------
+
+def run_wire_formats(quick: bool = True) -> List[Dict]:
+    """One federated round per registered transport on the same key:
+    asserts the aggregated scores are BIT-IDENTICAL across strategies
+    (exact equality — the transports differ only in wire format) and
+    reports the exact per-round byte accounting for each."""
+    ds = _dataset()
+    K, E = 4, 2 if quick else 10
+    comps = [8] if quick else [1, 8, 32]
+    rows = []
+    for comp in comps:
+        zspecs, state = _setup(SMALL_DIMS, comp, d=10, seed=0)
+        clients = iid_client_split(ds, K, seed=0)
+        xs, ys = next(client_batch_stream(clients, 64, E, seed=0))
+        batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+        key = jax.random.PRNGKey(0)
+        scores = {}
+        for row in wire_table(zspecs, K):
+            cfg = FederatedConfig(num_clients=K, local_steps=E,
+                                  local_lr=0.5, aggregate=row["strategy"])
+            t0 = time.time()
+            new_state, met = jax.jit(
+                lambda s, b, k, cfg=cfg: federated_round(
+                    zspecs, s, mlp_loss, b, k, cfg)
+            )(state, batch, key)
+            jax.block_until_ready(new_state)
+            scores[row["strategy"]] = new_state["scores"]
+            # f32 metric vs exact host accounting: equal to f32 rounding
+            assert np.isclose(
+                float(met["uplink_bytes_per_client"]),
+                float(row["uplink_bytes_per_client"]), rtol=1e-6,
+            )
+            rows.append({**row, "bench": "wire_formats",
+                         "compression": comp, "loss": float(met["loss"]),
+                         "round_s": time.time() - t0})
+        base = scores["mean_f32"]
+        for name, sc in scores.items():
+            for p in base:
+                np.testing.assert_array_equal(
+                    np.asarray(base[p]), np.asarray(sc[p]),
+                    err_msg=f"{name} not bit-identical to mean_f32 at {p}",
+                )
     return rows
 
 

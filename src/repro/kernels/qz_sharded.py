@@ -13,11 +13,11 @@ with the sharding-major layout (QSpec.major_axis/shard_count):
    ``out_specs`` reassembles the global tensor with ZERO collectives.
 
 The shard_map is entered without an explicit mesh so it composes with
-the (partially-manual) context mesh of the federated round.  On jax
-versions without the top-level ``jax.shard_map`` entry point the mesh
-is taken from the ambient ``with mesh:`` context instead
-(``_shard_map`` below), so the op is exercisable on forced-multi-device
-CPU too.
+the (partially-manual) context mesh of the federated round.  The
+jax-version compat (top-level ``jax.shard_map`` vs the experimental API
+bound to the ambient ``with mesh:`` context) is shared with the
+transport collectives — ``repro.comm.shardmap.shard_map_compat`` — so
+the op is exercisable on forced-multi-device CPU too.
 
 Batched variants (``sharded_reconstruct_batched`` /
 ``sharded_grad_z_batched``): K stacked clients share one generation of
@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..comm.shardmap import shard_map_compat
 from ..core.qspec import QSpec, row_indices, row_values
 
 AXIS = "model"
@@ -42,22 +43,8 @@ TARGET_CHUNK_BYTES = 128 << 20  # bound the (rows, d) temporaries
 
 
 def _shard_map(f, in_specs, out_specs):
-    """jax.shard_map when available; else the experimental API bound to
-    the ambient ``with mesh:`` context (jax<=0.4.x spelling)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
-                             axis_names={AXIS}, check_vma=False)
-    from jax._src import mesh as mesh_lib
-    from jax.experimental.shard_map import shard_map as _sm
-
-    mesh = mesh_lib.thread_resources.env.physical_mesh
-    if mesh.empty or AXIS not in mesh.axis_names:
-        raise RuntimeError(
-            "sharded reconstruction needs an active mesh with a "
-            f"'{AXIS}' axis (enter `with mesh:`) on this jax version"
-        )
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+    """The shared compat shim bound to this module's 'model' axis."""
+    return shard_map_compat(f, (AXIS,), in_specs, out_specs)
 
 
 def _num_chunks(spec: QSpec, nclients: int = 1) -> int:

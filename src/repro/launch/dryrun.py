@@ -157,7 +157,12 @@ def build_train_zampling(cfg: ArchConfig, shape: InputShape, mesh,
         ),
         P(),
     )
-    sm_out_specs = (jax.tree.map(lambda _: P(), tstate), {"loss": P()})
+    from ..core.federated import WIRE_METRIC_KEYS
+
+    sm_out_specs = (
+        jax.tree.map(lambda _: P(), tstate),
+        {"loss": P(), **{k: P() for k in WIRE_METRIC_KEYS}},
+    )
 
     smapped = jax.shard_map(
         round_fn, mesh=mesh, in_specs=sm_in_specs, out_specs=sm_out_specs,
@@ -166,7 +171,11 @@ def build_train_zampling(cfg: ArchConfig, shape: InputShape, mesh,
     jf = jax.jit(
         smapped,
         in_shardings=(state_shard, batch_shard, NamedSharding(mesh, P())),
-        out_shardings=(state_shard, {"loss": NamedSharding(mesh, P())}),
+        out_shardings=(
+            state_shard,
+            {"loss": NamedSharding(mesh, P()),
+             **{k: NamedSharding(mesh, P()) for k in WIRE_METRIC_KEYS}},
+        ),
         donate_argnums=(0,),
     )
     meta = {

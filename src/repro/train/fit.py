@@ -1,0 +1,103 @@
+"""Scan-over-rounds federated drivers (ROADMAP "Multi-round pipelining").
+
+``federated_round`` recompiles per (K, E) batch shape AND pays one
+dispatch per round when driven from Python.  ``federated_fit`` carries
+R rounds through a single ``lax.scan``: one compilation per
+(R, K, E, batch) shape, one dispatch for the whole block, with the
+stacked client batches prefetched as a (R, K, E, ...) slab.  Round r
+uses key ``jax.random.split(key, R)[r]``, so a fit over R rounds is
+numerically the same computation as R sequential ``federated_round``
+calls with those keys.
+
+``sharded_client_fit`` is the same scan wrapped around
+``sharded_client_update`` — the body to run inside ``shard_map`` on the
+production mesh, where each shard sees its own (R, E, ...) batch slab
+and the per-round mask aggregation stays a single collective
+(``FederatedConfig.aggregate`` selects the wire transport).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..core.federated import (
+    FederatedConfig,
+    LossFn,
+    federated_round,
+    sharded_client_update,
+)
+from ..core.zampling import ZamplingSpecs
+from ..optim import Optimizer
+
+
+def _rounds_and_keys(round_batches, key, rounds):
+    """Slice the batch slab to ``rounds`` (when given) and derive one
+    subkey per round — round r always uses ``split(key, R)[r]``."""
+    r = rounds if rounds is not None else jax.tree.leaves(
+        round_batches)[0].shape[0]
+    if rounds is not None:
+        round_batches = jax.tree.map(lambda x: x[:r], round_batches)
+    return round_batches, jax.random.split(key, r)
+
+
+def federated_fit(
+    zspecs: ZamplingSpecs,
+    state: Dict[str, Any],
+    loss_fn: LossFn,
+    round_batches,  # pytree with leading axes (R, K, local_steps, ...)
+    key,
+    cfg: FederatedConfig,
+    opt: Optional[Optimizer] = None,
+    rounds: Optional[int] = None,
+):
+    """R federated rounds under one ``lax.scan``.
+
+    Returns (state', metrics) with every metric stacked to shape (R,).
+    Wrap in ``jax.jit`` (or call from jitted code): the whole block
+    compiles once and re-runs for any same-shape batch slab.
+    ``rounds`` runs only the first ``rounds`` entries of the slab.
+    """
+    round_batches, keys = _rounds_and_keys(round_batches, key, rounds)
+
+    def body(state, xs):
+        batches, sub = xs
+        state, metrics = federated_round(
+            zspecs, state, loss_fn, batches, sub, cfg, opt
+        )
+        return state, metrics
+
+    return jax.lax.scan(body, state, (round_batches, keys))
+
+
+def sharded_client_fit(
+    zspecs: ZamplingSpecs,
+    state: Dict[str, Any],
+    loss_fn: LossFn,
+    round_batches,  # per-shard pytree with leading axes (R, local_steps, ...)
+    key,
+    cfg: FederatedConfig,
+    *,
+    axis_names=("data",),
+    opt: Optional[Optimizer] = None,
+    constraints=None,
+    row_sharding=None,
+    rounds: Optional[int] = None,
+):
+    """R rounds of ``sharded_client_update`` under one ``lax.scan`` —
+    run this INSIDE ``shard_map`` (client id = mesh position).  The key
+    is replicated; every shard derives the same per-round subkeys and
+    ``sharded_client_update`` folds in the axis index per client."""
+    round_batches, keys = _rounds_and_keys(round_batches, key, rounds)
+
+    def body(state, xs):
+        batches, sub = xs
+        state, metrics = sharded_client_update(
+            zspecs, state, loss_fn, batches, sub, cfg,
+            axis_names=axis_names, opt=opt, constraints=constraints,
+            row_sharding=row_sharding,
+        )
+        return state, metrics
+
+    return jax.lax.scan(body, state, (round_batches, keys))

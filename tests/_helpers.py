@@ -1,0 +1,21 @@
+"""Shared test utilities (not a test module)."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.federated import WIRE_METRIC_KEYS
+
+
+def data_mesh_or_skip(size=4, axis="data"):
+    """A (size,) mesh over ``axis``, or skip when the forced CPU
+    topology (tests/conftest.py) has fewer devices."""
+    if len(jax.devices()) < size:
+        pytest.skip(f"needs {size} devices (conftest forces 4 on CPU)")
+    return jax.make_mesh((size,), (axis,))
+
+
+def round_metric_specs():
+    """shard_map out_specs for the metrics dict every federated round
+    returns ({'loss'} + the wire byte counts) — replicated scalars."""
+    return {k: P() for k in ("loss",) + WIRE_METRIC_KEYS}
