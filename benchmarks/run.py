@@ -212,6 +212,103 @@ def bench_wire(full=False):
     return rows
 
 
+def bench_fused(full=False):
+    """Fused mask lifecycle vs the composed oracle (this PR's
+    tentpole): ``w = Q·Bern(f(s))`` as one op vs sample -> reconstruct
+    with the (K, n) f32 mask slab materialized between dispatches, and
+    ``sample_pack`` (scores -> uint32 wire lanes) vs draw -> pack.
+
+    Spec point: m = n = 2^20, compression 1, d = 1 — the paper's
+    Zhou-et-al. retrieval configuration (Q diagonal), where the mask
+    lifecycle IS the round and fusion matters most on CPU.  At the
+    compression-32 / d-8 end the Q-gather dominates the ref path
+    ~256:1, so the CPU-visible fused win shrinks to dispatch noise —
+    there the win is architectural (the (K, n) f32 slab never crossing
+    HBM; see kernels/qz_reconstruct.py).  n is FIXED across
+    quick/--full runs: rows are keyed (bench, K) in
+    BENCH_reconstruct.json and --full only raises iteration counts.
+
+    Composed timings are the honest pre-fusion pipeline: separate
+    dispatches with the straight-through ``p + sg(z - p)`` slab
+    crossing memory between them — exactly what ``mask_path='composed'``
+    (the bit-exact oracle) pays per round.  Fused and composed are
+    timed INTERLEAVED (median of alternating runs) so load drift
+    cancels; bit-exactness of fused vs composed is asserted before
+    timing.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.bitpack import pack_mask
+    from repro.core.qspec import make_qspec
+    from repro.core.sampling import sample_mask_hash, sample_mask_st_hash
+    from repro.kernels import ops
+
+    spec = make_qspec(0, (1024, 1024), 1024, compression=1, d=1, window=512)
+    iters = 30 if full else 12
+    rows = []
+
+    def ab(f_composed, f_fused):
+        """Median us of each side, alternating composed/fused runs."""
+        jax.block_until_ready(f_composed())  # compile + warm
+        jax.block_until_ready(f_fused())
+        ta, tb = [], []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_composed())
+            ta.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_fused())
+            tb.append(time.perf_counter() - t0)
+        return float(np.median(ta) * 1e6), float(np.median(tb) * 1e6)
+
+    for K in (10, 32):
+        P = jnp.asarray(
+            np.random.RandomState(0).rand(K, spec.n), jnp.float32
+        )
+        steps = jnp.arange(K, dtype=jnp.uint32)
+        f_st = jax.jit(lambda P_, s_: sample_mask_st_hash(
+            P_, spec.seed, spec.tensor_id, s_))
+        f_draw = jax.jit(lambda P_, s_: sample_mask_hash(
+            P_, spec.seed, spec.tensor_id, s_))
+        f_rec = jax.jit(lambda Z_: ops.reconstruct_batched(spec, Z_))
+        f_pack = jax.jit(pack_mask)
+        f_fused = jax.jit(lambda P_, s_: ops.sample_reconstruct_batched(
+            spec, P_, s_))
+        f_spack = jax.jit(lambda P_, s_: ops.sample_pack_batched(
+            spec, P_, s_))
+        # bit-exactness gate before timing (fused == composed, exact)
+        np.testing.assert_array_equal(
+            np.asarray(f_fused(P, steps)),
+            np.asarray(f_rec(f_draw(P, steps))),
+            err_msg="fused forward not bit-exact vs composed",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(f_spack(P, steps)),
+            np.asarray(f_pack(f_draw(P, steps))),
+            err_msg="fused pack not bit-exact vs composed",
+        )
+        out = {"bench": "fused_mask_lifecycle", "K": K, "m": spec.m,
+               "n": spec.n, "d": spec.d}
+        out["fwd_composed_us"], out["fwd_fused_us"] = ab(
+            lambda: f_rec(f_st(P, steps)), lambda: f_fused(P, steps))
+        out["pack_composed_us"], out["pack_fused_us"] = ab(
+            lambda: f_pack(f_draw(P, steps)), lambda: f_spack(P, steps))
+        out["fwd_speedup"] = out["fwd_composed_us"] / out["fwd_fused_us"]
+        out["pack_speedup"] = out["pack_composed_us"] / out["pack_fused_us"]
+        out["lifecycle_speedup"] = (
+            out["fwd_composed_us"] + out["pack_composed_us"]
+        ) / (out["fwd_fused_us"] + out["pack_fused_us"])
+        _emit(f"fused_lifecycle_K{K}", out["fwd_fused_us"],
+              f"composed={out['fwd_composed_us']:.0f}us"
+              f";fwd_speedup={out['fwd_speedup']:.3f}x"
+              f";pack_speedup={out['pack_speedup']:.2f}x"
+              f";lifecycle={out['lifecycle_speedup']:.3f}x")
+        rows.append(out)
+    return rows
+
+
 def bench_table1(full=False):
     from repro.experiments import comm_savings_table
 
@@ -321,6 +418,7 @@ def bench_wire_formats(full=False):
 BENCHES = {
     "kernel": lambda full: bench_kernel_reconstruct(),
     "fedround": bench_federated_round,
+    "fused": bench_fused,
     "wire": bench_wire,
     "wire_formats": bench_wire_formats,
     "table1": bench_table1,
@@ -345,7 +443,7 @@ def main() -> None:
         try:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
-            if name in ("kernel", "fedround", "wire"):
+            if name in ("kernel", "fedround", "fused", "wire"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

@@ -22,7 +22,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 (fast subset) =="
 python -m pytest -x -q
 
-echo "== wire staleness gate (committed BENCH_reconstruct.json) =="
+echo "== wire + fused staleness gate (committed BENCH_reconstruct.json) =="
 python - <<'EOF'
 import json
 import sys
@@ -39,10 +39,24 @@ if missing or bad:
              f"{sorted(missing)}; rows missing keys: {bad}. "
              f"Run `python -m benchmarks.run --only wire` and commit.")
 print(f"  ok: {len(wire)} wire rows, strategies {sorted(seen)}")
+
+# fused mask-lifecycle rows (same gate pattern as the wire rows): a PR
+# that touches the fused kernels but never refreshes the baseline fails
+# BEFORE any regeneration below.
+FUSED_KEYS = {"fwd_fused_us", "fwd_composed_us", "fwd_speedup",
+              "pack_fused_us", "pack_composed_us", "K", "n"}
+fused = [r for r in rows if r.get("bench") == "fused_mask_lifecycle"]
+ks = {r.get("K") for r in fused}
+bad = [r for r in fused if not FUSED_KEYS <= set(r)]
+if not {10, 32} <= ks or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: fused rows present for "
+             f"K={sorted(ks)} (need 10 and 32); rows missing keys: {bad}. "
+             f"Run `python -m benchmarks.run --only fused` and commit.")
+print(f"  ok: {len(fused)} fused rows, K={sorted(ks)}")
 EOF
 
-echo "== reconstruction + wire benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,wire
+echo "== reconstruction + fused + wire benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,wire
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -58,4 +72,9 @@ for r in rows:
         print(f"  wire {r['strategy']:>17} K={r['K']:>3}: "
               f"{r['us']/1e3:8.1f}ms  up={r['uplink_bytes_per_client']:>10}B "
               f"({r['uplink_vs_f32']:.4f}x f32)")
+    elif r.get("bench") == "fused_mask_lifecycle":
+        print(f"  fused K={r['K']:>3}: fwd {r['fwd_fused_us']/1e3:8.1f}ms "
+              f"vs composed {r['fwd_composed_us']/1e3:8.1f}ms "
+              f"({r['fwd_speedup']:.3f}x); lifecycle "
+              f"{r['lifecycle_speedup']:.3f}x")
 EOF

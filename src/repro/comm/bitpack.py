@@ -14,6 +14,14 @@ packing composes with ``vmap`` in ``federated_round`` and with
 clients' packed lanes it produces the per-coordinate vote counts
 ``sum_k z^(k)`` without ever materializing a (K, n) float slab — the
 uint32 equivalent of a lane-wise popcount accumulated over clients.
+
+On the fused mask lifecycle (``FederatedConfig.mask_path='fused'``)
+the lanes are not packed here at all: ``kernels.ops.sample_pack``
+draws the upload mask in-kernel and emits lanes in THIS module's
+layout (bit j of lane i = coordinate 32i+j, bit-identical to
+``pack_mask``), and the packed transports consume them natively
+(``Transport.aggregate_*_packed``).  ``pack_mask``/``unpack_mask``
+remain the composed oracle and the server-side unpack.
 """
 
 from __future__ import annotations

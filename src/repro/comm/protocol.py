@@ -41,9 +41,19 @@ from .shardmap import axis_size
 
 
 class Transport:
-    """One wire-format strategy. Subclasses define the three hooks."""
+    """One wire-format strategy. Subclasses define the three hooks.
+
+    Packed-native entry points: strategies with ``packed_wire`` take
+    the clients' uint32 lanes DIRECTLY (``aggregate_stacked_packed`` /
+    ``aggregate_collective_packed``) — the fused mask lifecycle
+    (``kernels.ops.sample_pack``) emits lanes from the score vector, so
+    the f32 mask slab never exists between the client update and the
+    wire.  The f32-mask entry points remain for the composed oracle and
+    for ``mean_f32``.
+    """
 
     name: str = "?"
+    packed_wire: bool = False  # True: native operand is uint32 lanes
 
     def uplink_bits_per_client(self, n: int) -> int:
         """Exact bits one client puts on the wire for an n-coord mask."""
@@ -57,6 +67,19 @@ class Transport:
         """Per-client (n,) mask -> replicated (n,) f32 mean, via
         collectives over ``axis_names`` (call inside shard_map)."""
         raise NotImplementedError
+
+    def aggregate_stacked_packed(self, lanes, n: int):
+        """(K, L) stacked uint32 lanes -> (n,) f32 mean."""
+        raise NotImplementedError(
+            f"transport {self.name!r} does not take packed lanes"
+        )
+
+    def aggregate_collective_packed(self, lanes, n: int,
+                                    axis_names: Sequence[str]):
+        """Per-client (L,) uint32 lanes -> replicated (n,) f32 mean."""
+        raise NotImplementedError(
+            f"transport {self.name!r} does not take packed lanes"
+        )
 
 
 class MeanF32(Transport):
@@ -84,10 +107,18 @@ def _popcount_mean(Z):
     return counts.astype(jnp.float32) / Z.shape[0]
 
 
+def _packed_mean(lanes, n: int):
+    """(K, L) uint32 lanes -> (n,) f32 mean — the native-lane version
+    of ``_popcount_mean`` (identical reduction on identical bits)."""
+    counts = packed_popcount_sum(lanes, n)
+    return counts.astype(jnp.float32) / lanes.shape[0]
+
+
 class PsumU32(Transport):
     """Bitpacked wire + integer psum of per-coordinate bit counts."""
 
     name = "psum_u32"
+    packed_wire = True
 
     def uplink_bits_per_client(self, n: int) -> int:
         return 32 * packed_len(n)
@@ -96,6 +127,13 @@ class PsumU32(Transport):
         return _popcount_mean(Z)
 
     def aggregate_collective(self, z, axis_names):
+        return self.aggregate_collective_packed(pack_mask(z), z.shape[-1],
+                                                axis_names)
+
+    def aggregate_stacked_packed(self, lanes, n):
+        return _packed_mean(lanes, n)
+
+    def aggregate_collective_packed(self, lanes, n, axis_names):
         # XLA has no sub-word all-reduce, so the SIMULATED collective
         # operand is the unpacked uint32 vector; the metered uplink is
         # the protocol's packed client upload (each contribution is
@@ -103,8 +141,7 @@ class PsumU32(Transport):
         # comm.metering.  allgather_packed keeps raw lanes on the wire
         # end to end.
         names = tuple(axis_names)
-        packed = pack_mask(z)  # (L,) uint32 — the client's upload
-        bits = unpack_mask(packed, z.shape[-1], dtype=jnp.uint32)
+        bits = unpack_mask(lanes, n, dtype=jnp.uint32)
         counts = jax.lax.psum(bits, names)
         return counts.astype(jnp.float32) / axis_size(names)
 
@@ -113,6 +150,7 @@ class AllgatherPacked(Transport):
     """Bitpacked wire, raw lanes all-gathered; server-side unpack."""
 
     name = "allgather_packed"
+    packed_wire = True
 
     def uplink_bits_per_client(self, n: int) -> int:
         return 32 * packed_len(n)
@@ -122,11 +160,17 @@ class AllgatherPacked(Transport):
         return _popcount_mean(Z)
 
     def aggregate_collective(self, z, axis_names):
+        return self.aggregate_collective_packed(pack_mask(z), z.shape[-1],
+                                                axis_names)
+
+    def aggregate_stacked_packed(self, lanes, n):
+        return _packed_mean(lanes, n)
+
+    def aggregate_collective_packed(self, lanes, n, axis_names):
         names = tuple(axis_names)
         k = axis_size(names)
-        packed = pack_mask(z)  # (L,) uint32 on the wire
-        lanes = jax.lax.all_gather(packed, names, axis=0)  # (K, L)
-        counts = packed_popcount_sum(lanes.reshape(k, -1), z.shape[-1])
+        gathered = jax.lax.all_gather(lanes, names, axis=0)  # (K, L)
+        counts = packed_popcount_sum(gathered.reshape(k, -1), n)
         return counts.astype(jnp.float32) / k
 
 
@@ -162,8 +206,10 @@ def get_transport(name: str) -> Transport:
 
 def resolve_transport(aggregate: str, mode: str = "sample") -> Transport:
     """Strategy for a round: bit transports need binary masks, so
-    continuous (probability-valued) uploads fall back to ``mean_f32``."""
-    if mode != "sample":
+    continuous (probability-valued) uploads fall back to ``mean_f32``.
+    Sampled AND discretized uploads are binary — both keep the
+    configured transport (and its wire accounting)."""
+    if mode == "continuous":
         return get_transport("mean_f32")
     return get_transport(aggregate)
 

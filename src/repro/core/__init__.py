@@ -1,17 +1,31 @@
 """Zampling core — the paper's contribution as composable JAX modules."""
 
-from .federated import FederatedConfig, federated_round, local_update, sharded_client_update
+from .federated import (
+    FederatedConfig,
+    federated_round,
+    local_update,
+    mask_program,
+    sharded_client_update,
+)
 from .qspec import QSpec, make_qspec, row_indices, row_values
 from .reconstruct import materialize_q, reconstruct_ref
 from .sampling import (
+    as_word,
     clip_probs,
     discretize_mask,
     expected_mask,
+    fold_word,
     init_scores,
+    key_word,
+    mask_u32,
     sample_mask,
+    sample_mask_hash,
     sample_mask_st,
+    sample_mask_st_hash,
 )
 from .zampling import (
+    MASK_MODES,
+    MaskProgram,
     ZamplingConfig,
     ZamplingSpecs,
     build_specs,
@@ -19,15 +33,18 @@ from .zampling import (
     sample_masks,
     sample_weights,
     state_spec,
+    validate_mask_mode,
     weights_from_masks,
 )
 
 __all__ = [
-    "FederatedConfig", "federated_round", "local_update",
+    "FederatedConfig", "federated_round", "local_update", "mask_program",
     "sharded_client_update", "QSpec", "make_qspec", "row_indices",
-    "row_values", "materialize_q", "reconstruct_ref", "clip_probs",
-    "discretize_mask", "expected_mask", "init_scores", "sample_mask",
-    "sample_mask_st", "ZamplingConfig", "ZamplingSpecs", "build_specs",
-    "init_state", "sample_masks", "sample_weights", "state_spec",
-    "weights_from_masks",
+    "row_values", "materialize_q", "reconstruct_ref", "as_word",
+    "clip_probs", "discretize_mask", "expected_mask", "fold_word",
+    "init_scores", "key_word", "mask_u32", "sample_mask",
+    "sample_mask_hash", "sample_mask_st", "sample_mask_st_hash",
+    "MASK_MODES", "MaskProgram", "ZamplingConfig", "ZamplingSpecs",
+    "build_specs", "init_state", "sample_masks", "sample_weights",
+    "state_spec", "validate_mask_mode", "weights_from_masks",
 ]

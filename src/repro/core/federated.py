@@ -7,35 +7,55 @@ One round:
   3. client k: p_new = f(s); z_new ~ Bern(p_new)  (n BITS on the wire)
   4. server: p(t+1) = mean_k z_new^(k)
 
+Fused mask lifecycle (this module's hot path): the mask ``z`` is n
+bits, and with ``FederatedConfig.mask_path='fused'`` (default) it
+NEVER exists as an f32 array between ops.  Every draw is keyed by the
+counter-based hash RNG (``core.sampling.mask_u32``: words
+``(spec.seed, spec.tensor_id, step, coord)``), where ``step`` is a
+uint32 draw word derived from (round key, round_index, client index,
+local step) — integer counters threaded through the scans, NOT
+pre-split PRNG keys.  Step 2's per-forward draw happens inside the
+fused reconstruction kernel (``kernels.ops.sample_reconstruct``:
+scores in, weights out, straight-through ``grad_s = Q^T grad_w ⊙
+1_{0<s<1}`` via its custom_vjp); step 3's upload draw happens inside
+the fused pack kernel (``kernels.ops.sample_pack``: scores in, uint32
+wire lanes out).  ``mask_path='composed'`` is the bit-exact oracle —
+explicit draw, then reconstruct/pack — equal to fused to EXACT
+equality, forward and gradient (tests/test_fused.py).  All mode
+dispatch lives in ONE place, ``core.zampling.MaskProgram`` (mode x
+fused x packed-ness).
+
 Step 3/4 — what actually crosses the network — is delegated to the
 wire-format transport layer (``repro.comm``): ``FederatedConfig
 .aggregate`` names a registered ``comm.protocol.Transport`` strategy
 (``mean_f32`` f32 baseline, ``psum_u32`` integer popcount psum of
 bitpacked lanes, ``allgather_packed`` raw-lane all-gather; ``mean`` is
-a backwards-compatible alias of ``mean_f32``).  All strategies are
+a backwards-compatible alias of ``mean_f32``).  Packed transports
+receive the clients' uint32 lanes NATIVELY (``aggregate_*_packed``) —
+there is no post-hoc jnp pack of an f32 mask slab.  All strategies are
 bit-exact against each other; they differ only in wire bytes, which
 ``comm.metering`` reports exactly in every round's metrics
 (``uplink_bytes_per_client`` etc.).  Continuous-mode rounds upload
 probabilities, not bits, and always use ``mean_f32``.
 
-Two execution paths with identical math:
+Two execution paths with identical math AND identical draws (the
+per-client draw words coincide, so the two paths produce bit-identical
+scores for the same key/round_index):
   * ``federated_round``        — vmap over a stacked client axis
     (CPU simulation; the paper's 10-client experiments).  The
-    ``w = Q z`` inside each client's forward/backward does NOT pay
-    K-times Q regeneration: ``kernels.ops`` installs custom_vmap rules
-    on the reconstruction custom_vjp, so this vmap lowers onto the
-    natively-batched kernels — see ``kernels.ops.reconstruct_batched``.
-    Aggregation uses ``Transport.aggregate_stacked`` on the (K, n)
-    mask slab.
+    fused ``w = Q·Bern(f(s))`` inside each client's forward/backward
+    does NOT pay K-times Q regeneration: ``kernels.ops`` installs
+    custom_vmap rules on the fused custom_vjp, so this vmap lowers
+    onto the natively-batched fused kernels (p-slab in-block, one
+    hash-RNG generation per row block).
   * ``sharded_client_update``  — the piece that runs inside
     ``shard_map`` on the production mesh, where the client axis IS the
-    ``data`` mesh axis and aggregation is
-    ``Transport.aggregate_collective``: the psum / all-gather of
-    (bit-packed) masks replaces the f32 gradient all-reduce of
-    standard data parallelism.
+    ``data`` mesh axis and aggregation is the transport's collective:
+    the psum / all-gather of packed mask lanes replaces the f32
+    gradient all-reduce of standard data parallelism.
 
-Multi-round driving (one compile per (K, E) shape, rounds carried
-through ``lax.scan``) lives in ``train.fit.federated_fit``.
+Multi-round driving (one compile per (K, E) shape, rounds + the round
+counter carried through ``lax.scan``) lives in ``train.fit``.
 """
 
 from __future__ import annotations
@@ -49,10 +69,12 @@ import jax.numpy as jnp
 from ..comm.metering import round_wire_report
 from ..comm.protocol import resolve_transport, transport_names
 from ..optim import Optimizer, sgd
-from .sampling import clip_probs, sample_mask, sample_mask_st
-from .zampling import ZamplingSpecs, weights_from_masks
+from .sampling import as_word, fold_word
+from .zampling import MaskProgram, ZamplingSpecs, validate_mask_mode
 
 LossFn = Callable[[Any, Any], jnp.ndarray]  # (params, batch) -> scalar
+
+_MASK_PATHS = ("fused", "composed")
 
 
 @dataclass(frozen=True)
@@ -60,8 +82,9 @@ class FederatedConfig:
     num_clients: int = 10
     local_steps: int = 1  # "epochs" per round in the paper (up to 100)
     local_lr: float = 0.1
-    mode: str = "sample"  # sample | continuous (ContinuousModel baseline)
+    mode: str = "sample"  # sample | continuous | discretize
     aggregate: str = "mean"  # a registered comm.protocol transport name
+    mask_path: str = "fused"  # fused | composed (the bit-exact oracle)
 
     def __post_init__(self):
         if self.aggregate not in transport_names():
@@ -69,18 +92,32 @@ class FederatedConfig:
                 f"unknown aggregate strategy {self.aggregate!r}; "
                 f"registered transports: {', '.join(transport_names())}"
             )
+        validate_mask_mode(self.mode)
+        if self.mask_path not in _MASK_PATHS:
+            raise ValueError(
+                f"unknown mask_path {self.mask_path!r}; valid paths: "
+                f"{', '.join(_MASK_PATHS)}"
+            )
 
 
-def _client_masks(zspecs: ZamplingSpecs, scores, key, mode):
-    masks = {}
-    for path, spec in zspecs.specs.items():
-        p = clip_probs(scores[path])
-        k = jax.random.fold_in(key, spec.tensor_id)
-        if mode == "sample":
-            masks[path] = sample_mask_st(p, k)
-        else:  # continuous
-            masks[path] = p
-    return masks
+def mask_program(zspecs: ZamplingSpecs, cfg: FederatedConfig) -> MaskProgram:
+    """The round's configured mask lifecycle: mode x fused x packed.
+
+    THE single definition of the packed-wire predicate: the resolved
+    transport's ``packed_wire`` (``resolve_transport`` already
+    downgrades continuous — the only non-binary upload — to
+    ``mean_f32``).  ``local_update`` emits what this program's
+    ``packed`` says, and the aggregators in ``federated_round`` /
+    ``sharded_client_update`` branch on the SAME field — never
+    recompute the predicate elsewhere.
+    """
+    transport = resolve_transport(cfg.aggregate, cfg.mode)
+    return MaskProgram(
+        zspecs,
+        mode=cfg.mode,
+        fused=cfg.mask_path == "fused",
+        packed=transport.packed_wire,
+    )
 
 
 def local_update(
@@ -88,55 +125,59 @@ def local_update(
     state: Dict[str, Any],
     loss_fn: LossFn,
     batches,  # (local_steps, ...) stacked client batches
-    key,
+    key,  # PRNG key or uint32 draw word identifying (round, client)
     cfg: FederatedConfig,
     opt: Optional[Optimizer] = None,
     constraints=None,
     row_sharding=None,
 ):
-    """One client's round: E local score-steps -> final Bernoulli masks.
+    """One client's round: E local score-steps -> the upload draw.
 
-    Returns (z_new {path: f32[n] in {0,1}}, dense_new, mean_loss).
-    Dense (non-reparametrized) leaves are trained locally too and
-    aggregated by plain averaging (they are tiny: norms/biases).
+    Returns (z_new, dense_new, mean_loss); ``z_new`` is {path: uint32
+    wire lanes} when the configured transport is packed (sample mode),
+    else {path: f32 masks/probs}.  Dense (non-reparametrized) leaves
+    are trained locally too and aggregated by plain averaging (they are
+    tiny: norms/biases).
+
+    Draw keying: local step ``e`` draws at word ``fold_word(kw, e)``
+    and the upload at ``fold_word(kw, E)``, where ``kw = as_word(key)``
+    — the integer step counter is the scanned xs, so the in-kernel
+    draw of the fused path and this oracle generate identical bits.
     """
     opt = opt or sgd(cfg.local_lr)
+    program = mask_program(zspecs, cfg)
+    kw = as_word(key)
     scores0 = dict(state["scores"])
     dense0 = dict(state["dense"])
 
-    def loss_of(trainable, batch, sub):
-        masks = _client_masks(zspecs, trainable["scores"], sub, cfg.mode)
-        params = weights_from_masks(
-            zspecs, masks, {"dense": trainable["dense"]},
+    def loss_of(trainable, batch, step_word):
+        params = program.weights(
+            trainable["scores"], trainable["dense"], step_word,
             constraints=constraints, row_sharding=row_sharding,
         )
         return loss_fn(params, batch)
 
     def step(carry, xs):
         trainable, opt_state = carry
-        batch, sub = xs
-        loss, grads = jax.value_and_grad(loss_of)(trainable, batch, sub)
+        batch, e = xs
+        loss, grads = jax.value_and_grad(loss_of)(
+            trainable, batch, fold_word(kw, e)
+        )
         updates, opt_state = opt.update(grads, opt_state, trainable)
         trainable = jax.tree.map(lambda p, u: p + u, trainable, updates)
         return (trainable, opt_state), loss
 
     trainable0 = {"scores": scores0, "dense": dense0}
-    keys = jax.random.split(key, cfg.local_steps)
+    steps = jnp.arange(cfg.local_steps, dtype=jnp.uint32)
     (trainable, _), losses = jax.lax.scan(
-        step, (trainable0, opt.init(trainable0)), (batches, keys)
+        step, (trainable0, opt.init(trainable0)), (batches, steps)
     )
 
-    # p_new = f(s_new); z_new ~ Bern(p_new)  — the n bits sent upstream
-    final_key = jax.random.fold_in(key, 0x5EED)
-    z_new = {}
-    for path, spec in zspecs.specs.items():
-        p_new = clip_probs(trainable["scores"][path])
-        if cfg.mode == "sample":
-            z_new[path] = sample_mask(
-                p_new, jax.random.fold_in(final_key, spec.tensor_id)
-            )
-        else:
-            z_new[path] = p_new
+    # p_new = f(s_new); z_new ~ Bern(p_new) — the n bits sent upstream,
+    # drawn at the next counter value (E) and emitted as wire lanes on
+    # the packed transports (fused: in-kernel, no f32 mask slab).
+    z_new = program.upload(trainable["scores"],
+                           fold_word(kw, cfg.local_steps))
     return z_new, trainable["dense"], jnp.mean(losses)
 
 
@@ -166,6 +207,17 @@ def _wire_metrics(zspecs: ZamplingSpecs, cfg: FederatedConfig,
     return {k: rep[k] for k in WIRE_METRIC_KEYS}
 
 
+def _aggregate_stacked(zspecs, transport, packed, z_all):
+    """Server reduction over the stacked client axis, packed or f32."""
+    if packed:
+        return {
+            p: transport.aggregate_stacked_packed(z_all[p],
+                                                  zspecs.specs[p].n)
+            for p in z_all
+        }
+    return {p: transport.aggregate_stacked(z) for p, z in z_all.items()}
+
+
 def federated_round(
     zspecs: ZamplingSpecs,
     state: Dict[str, Any],
@@ -174,17 +226,28 @@ def federated_round(
     key,
     cfg: FederatedConfig,
     opt: Optional[Optimizer] = None,
+    *,
+    round_index=0,
 ):
-    """Full round over K stacked clients (vmap). Returns (state', metrics)."""
+    """Full round over K stacked clients (vmap). Returns (state', metrics).
+
+    ``round_index``: the round counter folded into every draw word
+    (threaded by ``train.fit.federated_fit``'s scan); client k draws
+    from word ``hash(key_word(key), round_index, k)``.
+    """
     transport = resolve_transport(cfg.aggregate, cfg.mode)
-    keys = jax.random.split(key, cfg.num_clients)
+    packed = mask_program(zspecs, cfg).packed
+    words = fold_word(
+        as_word(key), jnp.asarray(round_index).astype(jnp.uint32),
+        jnp.arange(cfg.num_clients, dtype=jnp.uint32),
+    )
 
-    def one(batches, k):
-        return local_update(zspecs, state, loss_fn, batches, k, cfg, opt)
+    def one(batches, w):
+        return local_update(zspecs, state, loss_fn, batches, w, cfg, opt)
 
-    z_all, dense_all, losses = jax.vmap(one)(client_batches, keys)
+    z_all, dense_all, losses = jax.vmap(one)(client_batches, words)
     # server aggregation: p(t+1) = mean_k z^(k), via the wire transport
-    new_scores = {p: transport.aggregate_stacked(z) for p, z in z_all.items()}
+    new_scores = _aggregate_stacked(zspecs, transport, packed, z_all)
     new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
     new_state = {"scores": new_scores, "dense": new_dense}
     metrics = {"loss": jnp.mean(losses), **_wire_metrics(zspecs, cfg)}
@@ -203,31 +266,48 @@ def sharded_client_update(
     opt: Optional[Optimizer] = None,
     constraints=None,
     row_sharding=None,
+    round_index=0,
 ):
     """Body to run under ``shard_map``: client id = mesh position.
 
     The mask aggregation is the ONLY cross-client communication; the
     configured transport decides its wire format — an f32 psum
-    (``mean_f32``), a uint32 popcount psum of bitpacked lanes
+    (``mean_f32``), a uint32 popcount psum of the packed lanes
     (``psum_u32``), or an all-gather of the raw packed lanes
-    (``allgather_packed``) over the client axes.
+    (``allgather_packed``) over the client axes.  On the packed
+    transports the collective operand IS the lanes the fused kernel
+    emitted — no f32 mask slab exists on this path at all.  The draw
+    words match ``federated_round``'s (client id = axis index), so the
+    two paths are bit-identical for the same key/round_index.
     """
     from ..comm.shardmap import axis_size
 
     transport = resolve_transport(cfg.aggregate, cfg.mode)
+    packed = mask_program(zspecs, cfg).packed
     idx = sum(
         jax.lax.axis_index(a) * 1_000_003 ** i for i, a in enumerate(axis_names)
     )
-    ckey = jax.random.fold_in(key, idx)
+    word = fold_word(
+        as_word(key), jnp.asarray(round_index).astype(jnp.uint32),
+        jnp.asarray(idx).astype(jnp.uint32),
+    )
     z_new, dense_new, loss = local_update(
-        zspecs, state, loss_fn, batches, ckey, cfg, opt,
+        zspecs, state, loss_fn, batches, word, cfg, opt,
         constraints=constraints, row_sharding=row_sharding,
     )
     nclients = axis_size(axis_names)
-    new_scores = {
-        p: transport.aggregate_collective(z, axis_names)
-        for p, z in z_new.items()
-    }
+    if packed:
+        new_scores = {
+            p: transport.aggregate_collective_packed(
+                z, zspecs.specs[p].n, axis_names
+            )
+            for p, z in z_new.items()
+        }
+    else:
+        new_scores = {
+            p: transport.aggregate_collective(z, axis_names)
+            for p, z in z_new.items()
+        }
     # dense leaves stay on the f32 psum path: XLA:CPU's
     # AllReducePromotion pass aborts on bf16 all-reduces (and f32 is
     # the numerically right accumulator anyway)

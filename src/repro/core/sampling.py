@@ -6,6 +6,21 @@ every forward pass.  Gradients use the straight-through estimator: the
 backward pass treats ``z`` as ``p``, and the clip zeroes coordinates
 outside (0, 1) — exactly the paper's
 ``∇_s L = (∇_w L ⊙ Q) ⊙ 1_{0<p<1}``.
+
+RNG: every Bernoulli draw comes from the counter-based hash RNG
+(``core.hashrng``), NOT ``jax.random``.  The bit at coordinate ``j`` of
+tensor ``tensor_id`` at draw counter ``step`` is
+
+    z_j = 1[ uniform(hash_u32(seed, tensor_id, MASK_CTR, step, j)) <= p_j ]
+
+so the pure-jnp oracle and the Pallas kernels regenerate *identical*
+bits from ``(seed, tensor_id, step)`` alone — a window block only needs
+its coordinate range and the traced ``step`` word, never a (n,) mask
+operand.  ``step`` is a single uint32 draw counter; callers build it
+from their PRNG key (``key_word``) plus round/client/local-step
+counters threaded through their scans (``core.federated.local_update``,
+``train.fit``).  ``MASK_CTR`` keeps the mask stream disjoint from the
+Q-generation counter space (``core.qspec``).
 """
 
 from __future__ import annotations
@@ -13,16 +28,84 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .hashrng import bernoulli_u32, hash_u32
+
+# Counter-space role of the mask stream: hash words are
+# (seed, tensor_id, MASK_CTR, step, coord) — a 5-word combine, disjoint
+# from qspec's 4-word (seed, tensor_id, row, ctr) Q streams.
+MASK_CTR = 0x0008_0000
+
 
 def clip_probs(s):
     """p = f(s), the ReLU clipped at 1. Gradient is 1_{0<=s<=1}."""
     return jnp.clip(s, 0.0, 1.0)
 
 
+# ---------------------------------------------------------------------------
+# Draw words (uint32 counters)
+# ---------------------------------------------------------------------------
+
+def key_word(key):
+    """Collapse a jax PRNG key (typed or raw uint32 data) to one u32."""
+    arr = jnp.asarray(key)
+    if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        arr = jax.random.key_data(key)
+    arr = arr.astype(jnp.uint32).reshape(-1)
+    return hash_u32(*(arr[i] for i in range(arr.shape[0])))
+
+
+def as_word(key_or_word):
+    """Accept a PRNG key, an integer, or an existing u32 word."""
+    arr = jnp.asarray(key_or_word)
+    if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key) or arr.ndim > 0:
+        return key_word(key_or_word)
+    return arr.astype(jnp.uint32)
+
+
+def fold_word(word, *counters):
+    """Derive a sub-word: hash-combine counters into a draw word."""
+    return hash_u32(word, *counters)
+
+
+# ---------------------------------------------------------------------------
+# The mask stream
+# ---------------------------------------------------------------------------
+
+def mask_u32(seed, tensor_id, step, coords):
+    """The u32 mask stream at the given coordinates.
+
+    ``seed``/``tensor_id`` are static ints (folded at trace time),
+    ``step`` is the traced draw counter, ``coords`` the (traced or
+    static) coordinate array — the same function body runs in the jnp
+    oracle and inside Pallas kernel blocks.
+    """
+    return hash_u32(seed, tensor_id, MASK_CTR, step, coords)
+
+
+def sample_mask_hash(p, seed, tensor_id, step):
+    """z ~ Bern(p) from the hash stream, float32 in {0,1}. Not
+    differentiable; ``p`` has shape (..., n) with coordinates on the
+    last axis and ``step`` broadcasting against the leading axes."""
+    n = p.shape[-1]
+    coords = jnp.arange(n, dtype=jnp.uint32)
+    step = jnp.asarray(step, jnp.uint32)
+    u = mask_u32(seed, tensor_id, step[..., None], coords)
+    return bernoulli_u32(u, p)
+
+
+def sample_mask_st_hash(p, seed, tensor_id, step):
+    """Straight-through hash Bernoulli: forward z, backward identity."""
+    z = sample_mask_hash(p, seed, tensor_id, step)
+    return p + jax.lax.stop_gradient(z - p)
+
+
 def sample_mask(p, key):
-    """z ~ Bern(p), float32 in {0,1}. Not differentiable."""
-    u = jax.random.uniform(key, p.shape, dtype=jnp.float32)
-    return (u <= p).astype(jnp.float32)
+    """z ~ Bern(p), float32 in {0,1}. Not differentiable.
+
+    Key-based convenience wrapper over the hash stream (seed/tensor 0);
+    prefer ``sample_mask_hash`` where a QSpec identifies the tensor.
+    """
+    return sample_mask_hash(p, 0, 0, as_word(key))
 
 
 def sample_mask_st(p, key):

@@ -12,6 +12,15 @@ Pipeline per step (training-by-sampling):
     z ~ Bern(p)  (straight-through)     # fresh every step
     w = Q z      (materialization-free) # kernels/ops.py dispatch
     loss = model.apply(w, batch); grad flows w -> z -> s
+
+The mask lifecycle (which mode, whether the draw is fused into the
+reconstruction/pack kernels, and whether the upload leaves as uint32
+wire lanes) is configured ONCE per use as a ``MaskProgram`` — the
+single implementation behind ``sample_masks``/``sample_weights`` here
+and ``local_update`` in ``core.federated``.  Draws are keyed by the
+counter-based hash RNG (``core.sampling.mask_u32``), never
+``jax.random``, so the jnp oracle and the Pallas kernels regenerate
+identical bits from ``(seed, tensor_id, step, coord)``.
 """
 
 from __future__ import annotations
@@ -23,9 +32,19 @@ import jax
 import jax.numpy as jnp
 
 from .qspec import QSpec, make_qspec
-from .sampling import clip_probs, discretize_mask, init_scores, sample_mask, sample_mask_st
+from .sampling import (
+    as_word,
+    clip_probs,
+    discretize_mask,
+    init_scores,
+    sample_mask_hash,
+    sample_mask_st_hash,
+)
 
 PathLeaf = Tuple[str, Any]
+
+# Valid mask lifecycles; shared by MaskProgram and FederatedConfig.
+MASK_MODES = ("sample", "continuous", "discretize")
 
 
 def _path_str(path) -> str:
@@ -74,13 +93,33 @@ class ZamplingSpecs:
         return self.m_total / max(self.n_total, 1)
 
     def comm_bits_per_round(self, packed: bool = True) -> Dict[str, int]:
-        """Analytic communication accounting (paper Table 1)."""
+        """Analytic communication accounting (paper Table 1).
+
+        ``client_up``/``server_down`` are the paper's IDEALIZED figures
+        (n mask bits up, n f32 scores down) and deliberately ignore two
+        real-wire costs: (a) masks travel as uint32 lanes, so each
+        tensor pays up to 31 bits of lane padding, and (b) the dense
+        (non-reparametrized) leaves are trained and averaged too, f32
+        both ways.  The ``*_wire`` keys are the EXACT protocol figures
+        including both — they match ``comm.metering.round_wire_report``
+        bit-for-byte (pinned in tests/test_fused.py): ``client_up_wire``
+        == 8x the metered ``uplink_bytes_per_client`` for the packed
+        (``psum_u32``/``allgather_packed``) resp. ``mean_f32``
+        transports.
+        """
+        from ..comm.bitpack import packed_len  # comm sits above core
+
         n, m = self.n_total, self.m_total
+        dense_bits = 32 * self.dense_total
+        lane_bits = sum(32 * packed_len(s.n) for s in self.specs.values())
+        mask_up_wire = lane_bits if packed else 32 * n
         return {
             "naive_client_up": 32 * m,
             "client_up": n if packed else 8 * n,
             "server_down": 32 * n,
             "naive_server_down": 32 * m,
+            "client_up_wire": mask_up_wire + dense_bits,
+            "server_down_wire": 32 * n + dense_bits,
         }
 
 
@@ -191,32 +230,143 @@ def state_spec(zspecs: ZamplingSpecs):
 
 
 # ---------------------------------------------------------------------------
-# Weights
+# The mask program: one abstraction for the whole mask lifecycle
+# (mode x fused/composed x packed-ness).  core.federated and the public
+# sample_masks/sample_weights below all route through it — there is ONE
+# implementation of the mode dispatch and ONE draw keying scheme
+# (core.sampling.mask_u32: (spec.seed, spec.tensor_id, step, coord)).
 # ---------------------------------------------------------------------------
 
-def _mask(p, key, mode: str):
-    if mode == "sample":
-        return sample_mask_st(p, key)
-    if mode == "continuous":
-        return p
-    if mode == "discretize":
+def validate_mask_mode(mode: str) -> str:
+    if mode not in MASK_MODES:
+        raise ValueError(
+            f"unknown mask mode {mode!r}; valid modes: "
+            f"{', '.join(MASK_MODES)}"
+        )
+    return mode
+
+
+@dataclass(frozen=True)
+class MaskProgram:
+    """One configured mask lifecycle over a spec set.
+
+    ``fused=True`` routes mode='sample' through the fused kernels
+    (``kernels.ops.sample_reconstruct`` / ``sample_pack``): scores in,
+    weights / wire lanes out, the mask a transient in-kernel value.
+    ``fused=False`` is the composed oracle — explicit straight-through
+    draw, then reconstruct/pack — bit-identical to fused (exact
+    equality, forward and gradient) by the shared hash-RNG keying.
+    ``packed`` selects the upload representation: uint32 wire lanes
+    (what the packed transports move) vs the f32 {0,1} mask.
+    ``step`` everywhere below is the uint32 draw-counter word; callers
+    derive it from their PRNG key + round/client/local-step counters
+    (``core.sampling.key_word``/``fold_word``).
+    """
+
+    zspecs: ZamplingSpecs
+    mode: str = "sample"
+    fused: bool = True
+    packed: bool = False
+    impl: Optional[str] = None  # kernels impl override (None = default)
+
+    def __post_init__(self):
+        validate_mask_mode(self.mode)
+
+    # -- composed masks ------------------------------------------------
+    def mask(self, p, spec: QSpec, step):
+        """One tensor's mask from CLIPPED probabilities ``p`` (the mode
+        dispatch formerly duplicated across zampling._mask and
+        federated._client_masks)."""
+        if self.mode == "sample":
+            return sample_mask_st_hash(p, spec.seed, spec.tensor_id, step)
+        if self.mode == "continuous":
+            return p
         return discretize_mask(p)
-    raise ValueError(f"unknown mode {mode!r}")
+
+    def masks(self, scores, step) -> Dict[str, Any]:
+        """{path: mask}, one fresh draw per tensor at draw word ``step``."""
+        return {
+            path: self.mask(clip_probs(scores[path]), spec, step)
+            for path, spec in self.zspecs.specs.items()
+        }
+
+    # -- weights -------------------------------------------------------
+    def weights(self, scores, dense, step,
+                constraints: Optional[Dict[str, Any]] = None,
+                row_sharding=None):
+        """Full param pytree for one forward pass at draw word ``step``."""
+        if not (self.fused and self.mode == "sample"):
+            return weights_from_masks(
+                self.zspecs, self.masks(scores, step), {"dense": dense},
+                constraints=constraints, row_sharding=row_sharding,
+                impl=self.impl,
+            )
+        from ..kernels import ops  # late import: kernels sit above core
+
+        tmpl = dict(_flatten(self.zspecs.template))
+        leaves = {}
+        for path, spec in self.zspecs.specs.items():
+            w = ops.sample_reconstruct(
+                spec, clip_probs(scores[path]), step,
+                dtype=tmpl[path].dtype, chunks=self.zspecs.config.chunks,
+                impl=self.impl, row_sharding=row_sharding,
+            )
+            if constraints is not None and path in constraints:
+                w = jax.lax.with_sharding_constraint(w, constraints[path])
+            leaves[path] = w
+        for path in self.zspecs.dense_paths:
+            leaves[path] = dense[path]
+        return unflatten_like(self.zspecs.template, leaves)
+
+    # -- the wire draw -------------------------------------------------
+    def upload(self, scores, step) -> Dict[str, Any]:
+        """The end-of-round upload per tensor: fresh (gradient-free)
+        Bernoulli bits at draw word ``step`` — as uint32 wire lanes
+        when ``packed`` (what the packed transports move natively),
+        else as the f32 {0,1} mask.  Discretize mode uploads rounded
+        bits (binary, so packable too); continuous mode uploads
+        probabilities (f32 only — ``mean_f32`` wire)."""
+        from ..kernels import ops
+
+        out = {}
+        for path, spec in self.zspecs.specs.items():
+            p = clip_probs(scores[path])
+            if self.mode == "continuous":
+                out[path] = p
+            elif self.mode == "discretize":
+                if self.packed:
+                    from ..comm.bitpack import pack_mask
+
+                    out[path] = pack_mask(discretize_mask(p))
+                else:
+                    out[path] = discretize_mask(p)
+            elif self.packed and self.fused:
+                out[path] = ops.sample_pack(spec, p, step, impl=self.impl)
+            elif self.packed:
+                from ..comm.bitpack import pack_mask
+
+                out[path] = pack_mask(
+                    sample_mask_hash(p, spec.seed, spec.tensor_id, step)
+                )
+            else:
+                out[path] = sample_mask_hash(p, spec.seed, spec.tensor_id,
+                                             step)
+        return out
 
 
 def sample_masks(zspecs: ZamplingSpecs, state, key, mode: Optional[str] = None):
-    """{path: z} straight-through masks, one fresh draw per tensor."""
-    mode = mode or zspecs.config.mode
-    masks = {}
-    for path, spec in zspecs.specs.items():
-        p = clip_probs(state["scores"][path])
-        masks[path] = _mask(p, jax.random.fold_in(key, spec.tensor_id), mode)
-    return masks
+    """{path: z} straight-through masks, one fresh draw per tensor.
+
+    ``key``: a PRNG key or uint32 draw word (``core.sampling.as_word``).
+    """
+    program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
+                          fused=False)
+    return program.masks(state["scores"], as_word(key))
 
 
 def weights_from_masks(zspecs: ZamplingSpecs, masks, state,
                        constraints: Optional[Dict[str, Any]] = None,
-                       row_sharding=None):
+                       row_sharding=None, impl: Optional[str] = None):
     """Reconstruct the full model param tree from masks + dense leaves.
 
     ``constraints``: optional {path: NamedSharding} applied to each
@@ -233,6 +383,7 @@ def weights_from_masks(zspecs: ZamplingSpecs, masks, state,
         w = ops.reconstruct(
             spec, masks[path], dtype=tmpl[path].dtype,
             chunks=zspecs.config.chunks, row_sharding=row_sharding,
+            impl=impl,
         )
         if constraints is not None and path in constraints:
             w = jax.lax.with_sharding_constraint(w, constraints[path])
@@ -245,11 +396,18 @@ def weights_from_masks(zspecs: ZamplingSpecs, masks, state,
 def sample_weights(zspecs: ZamplingSpecs, state, key,
                    mode: Optional[str] = None,
                    constraints: Optional[Dict[str, Any]] = None,
-                   row_sharding=None):
-    """One fresh sampled network: params pytree matching the template."""
-    masks = sample_masks(zspecs, state, key, mode)
-    return weights_from_masks(zspecs, masks, state, constraints=constraints,
-                              row_sharding=row_sharding)
+                   row_sharding=None, fused: bool = True):
+    """One fresh sampled network: params pytree matching the template.
+
+    Routes through ``MaskProgram``: with ``fused`` (default) the
+    sample-mode draw happens inside the fused reconstruction kernel;
+    ``fused=False`` is the composed bit-exact oracle.
+    """
+    program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
+                          fused=fused)
+    return program.weights(state["scores"], state["dense"], as_word(key),
+                           constraints=constraints,
+                           row_sharding=row_sharding)
 
 
 def unflatten_like(template, leaves: Dict[str, Any]):

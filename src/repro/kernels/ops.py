@@ -34,17 +34,35 @@ the repo root) track the batched-vs-vmap win: ~4x at K=10 and ~5x
 at K=32 on the CPU ref path (forward; the backward scatter batches
 well under plain vmap and stays at parity), where the hash+Box-Muller regeneration
 dominates a single-client reconstruct.
+
+Fused mask lifecycle: ``sample_reconstruct`` (+``_batched``) computes
+``w = Q·Bern(p)`` with the Bernoulli draw INSIDE the op — probs in,
+weights out, the mask a transient value keyed by the uint32 ``step``
+draw word (``core.sampling.mask_u32``).  Its custom_vjp backward is
+the straight-through ``grad_p = Q^T grad_w`` — literally the composed
+op's backward cores — so fused ≡ composed to exact equality, forward
+and gradient, per impl (tests/test_fused.py).  ``sample_pack``
+(+``_batched``) is the end-of-round upload draw: probs in, uint32
+wire lanes out (``comm.bitpack.pack_mask`` layout), fed natively to
+the packed transports.  Both carry the same custom_vmap rules as the
+composed ops.  The default impl honors the ``REPRO_RECONSTRUCT_IMPL``
+env override (mirroring ``REPRO_BATCH_MAP_THRESHOLD``); benchmarks
+(bench_fused -> BENCH_reconstruct.json ``fused_mask_lifecycle`` rows)
+track fused-vs-composed at the Zhou-retrieval spec point.
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.qspec import QSpec, padded_row_window, row_indices, row_values
+from ..core.sampling import sample_mask_hash
 from ..core.reconstruct import (
     _insert_padding,
     _insert_padding_batched,
@@ -62,12 +80,34 @@ from ..core.reconstruct import (
 from . import qz_reconstruct as _pk
 
 _DEFAULT_IMPL = "ref"
+_VALID_IMPLS = ("ref", "pallas")
 
 
 def set_default_impl(impl: str) -> None:
+    """Set the process-wide default reconstruction impl."""
     global _DEFAULT_IMPL
-    assert impl in ("ref", "pallas")
+    if impl not in _VALID_IMPLS:
+        raise ValueError(
+            f"unknown reconstruction impl {impl!r}; valid impls: "
+            f"{', '.join(_VALID_IMPLS)}"
+        )
     _DEFAULT_IMPL = impl
+
+
+def _default_impl() -> str:
+    """Effective default impl: the ``REPRO_RECONSTRUCT_IMPL`` env var
+    overrides ``set_default_impl`` (mirroring
+    ``REPRO_BATCH_MAP_THRESHOLD``) — read at trace time, so flipping it
+    between jit calls of different shapes needs no code edit."""
+    env = os.environ.get("REPRO_RECONSTRUCT_IMPL")
+    if env is None:
+        return _DEFAULT_IMPL
+    if env not in _VALID_IMPLS:
+        raise ValueError(
+            f"REPRO_RECONSTRUCT_IMPL={env!r} is not a valid impl; "
+            f"valid impls: {', '.join(_VALID_IMPLS)}"
+        )
+    return env
 
 
 def _chunk_plan(spec: QSpec, chunks: int):
@@ -322,7 +362,7 @@ def reconstruct(spec: QSpec, z, *, dtype=jnp.float32, chunks: int = 1,
     False to force the per-client path (benchmark baseline).
     """
     model_size = _resolve_model_size(model_size, row_sharding)
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or _default_impl()
     fn = _reconstruct if auto_batch else _reconstruct_naive
     w = fn(spec, z.astype(jnp.float32), impl, int(chunks), model_size)
     return w.astype(dtype)
@@ -340,7 +380,218 @@ def reconstruct_batched(spec: QSpec, Z, *, dtype=jnp.float32,
     if Z.ndim != 2 or Z.shape[-1] != spec.n:
         raise ValueError(f"Z has shape {Z.shape}, spec expects (K, {spec.n})")
     model_size = _resolve_model_size(model_size, row_sharding)
-    impl = impl or _DEFAULT_IMPL
+    impl = impl or _default_impl()
     W = _reconstruct_b(spec, Z.astype(jnp.float32), impl, int(chunks),
                        model_size)
     return W.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused mask lifecycle: w = Q·Bern(p) and lanes = pack(Bern(p)) as one
+# op each — the mask z never exists as an f32 array between ops.  The
+# draw is the counter-based hash stream (core.sampling.mask_u32), so
+# fused and composed (sample -> reconstruct -> pack) regenerate
+# IDENTICAL bits from (spec.seed, spec.tensor_id, step, coord): the
+# bit-exactness contract is exact equality, forward and gradient.
+# ---------------------------------------------------------------------------
+
+def _sample_one(spec: QSpec, p, step):
+    """The oracle draw for one client: z (n,) f32 in {0,1}."""
+    return sample_mask_hash(p, spec.seed, spec.tensor_id, step)
+
+
+def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size):
+    if model_size is not None and spec.shard_count > 1:
+        from .qz_sharded import sharded_reconstruct
+
+        return sharded_reconstruct(spec, _sample_one(spec, p, step),
+                                   model_size)
+    if impl == "pallas":
+        assert spec.shard_count == 1, "pallas path is single-block layout"
+        return _unmove(spec, _pk.qz_sample_reconstruct_fwd(spec, p, step))
+    z = _sample_one(spec, p, step)
+    if chunks > 1:
+        return _ref_chunked(spec, z, chunks)
+    return reconstruct_ref(spec, z, dtype=jnp.float32)
+
+
+def _fwd_many_fused(spec: QSpec, P, steps, impl, chunks, model_size):
+    if model_size is not None and spec.shard_count > 1:
+        from .qz_sharded import sharded_reconstruct_batched
+
+        return sharded_reconstruct_batched(
+            spec, _sample_one(spec, P, steps), model_size
+        )
+    if impl == "pallas":
+        assert spec.shard_count == 1, "pallas path is single-block layout"
+        return _unmove_batched(
+            spec, _pk.qz_sample_reconstruct_batched_fwd(spec, P, steps)
+        )
+    Z = _sample_one(spec, P, steps)
+    if chunks > 1:
+        return _ref_chunked_batched(spec, Z, chunks)
+    return reconstruct_batched_ref(spec, Z, dtype=jnp.float32)
+
+
+@functools.lru_cache(maxsize=256)
+def _fused_cores(spec: QSpec, impl: str, chunks: int, model_size):
+    """vmap-aware fused forward: a batched (p, step) lowers onto the
+    natively-batched fused impls (same pattern as ``_vmap_cores``; the
+    backward IS ``_vmap_cores``'s bwd core — the straight-through
+    cotangent does not depend on the draw)."""
+
+    @jax.custom_batching.custom_vmap
+    def fwd_core(p, step):
+        return _fwd_one_fused(spec, p, step, impl, chunks, model_size)
+
+    @fwd_core.def_vmap
+    def _fwd_rule(axis_size, in_batched, P, steps):
+        pb, sb = in_batched
+        if not pb and not sb:
+            return _fwd_one_fused(spec, P, steps, impl, chunks,
+                                  model_size), False
+        if not pb:
+            P = jnp.broadcast_to(P, (axis_size, *P.shape))
+        if not sb:
+            steps = jnp.broadcast_to(steps, (axis_size,))
+        return _fwd_many_fused(spec, P, steps, impl, chunks,
+                               model_size), True
+
+    return fwd_core
+
+
+def _float0_like(step):
+    """Cotangent for the integer step word (jax float0 convention)."""
+    return np.zeros(np.shape(step), jax.dtypes.float0)
+
+
+def _make_sample_reconstruct_op(fwd_impl, bwd_impl):
+    """custom_vjp for the fused op: primal draws in-op; backward is the
+    straight-through ``grad_p = Q^T grad_w`` — the SAME code path as
+    the composed reconstruction backward, so gradients are bit-exact
+    across fused/composed by construction."""
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 3, 4, 5))
+    def op(spec: QSpec, p, step, impl: str, chunks: int, model_size):
+        return fwd_impl(spec, p, step, impl, chunks, model_size)
+
+    def fwd(spec, p, step, impl, chunks, model_size):
+        return op(spec, p, step, impl, chunks, model_size), step
+
+    def bwd(spec, impl, chunks, model_size, step, g):
+        return (bwd_impl(spec, g, impl, chunks, model_size),
+                _float0_like(step))
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+# vmap-aware fused op (the custom_vmap hook lowers vmap(local_update)
+# onto the batched fused kernel) and the explicit K-stacked entry.
+_sample_reconstruct = _make_sample_reconstruct_op(
+    lambda spec, p, step, impl, chunks, ms: _fused_cores(
+        spec, impl, chunks, ms)(p, step),
+    lambda spec, g, impl, chunks, ms: _vmap_cores(spec, impl, chunks,
+                                                  ms)[1](g),
+)
+_sample_reconstruct_b = _make_sample_reconstruct_op(_fwd_many_fused,
+                                                    _bwd_many)
+
+
+def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
+                       chunks: int = 1, impl: Optional[str] = None,
+                       model_size: Optional[int] = None, row_sharding=None):
+    """w = Q·Bern(p) fused: probabilities in, weights out.
+
+    ``step`` is the uint32 draw-counter word (``core.sampling``); the
+    mask is drawn inside the op (in-block on the Pallas path) and is
+    bit-identical to ``reconstruct(spec, sample_mask_hash(p, ...))``.
+    Differentiable in ``p`` with the straight-through
+    ``grad_p = Q^T grad_w``; chain through ``clip_probs`` for the
+    paper's ``⊙ 1_{0<s<1}`` gate.  Same impl dispatch as
+    ``reconstruct``.
+    """
+    model_size = _resolve_model_size(model_size, row_sharding)
+    impl = impl or _default_impl()
+    w = _sample_reconstruct(spec, p.astype(jnp.float32),
+                            jnp.asarray(step, jnp.uint32), impl,
+                            int(chunks), model_size)
+    return w.astype(dtype)
+
+
+def sample_reconstruct_batched(spec: QSpec, P, steps, *, dtype=jnp.float32,
+                               chunks: int = 1, impl: Optional[str] = None,
+                               model_size: Optional[int] = None,
+                               row_sharding=None):
+    """Fused W = Q·Bern(p^(k)) for K stacked clients: P (K, n) probs +
+    steps (K,) draw words -> (K, *spec.shape)."""
+    if P.ndim != 2 or P.shape[-1] != spec.n:
+        raise ValueError(f"P has shape {P.shape}, spec expects (K, {spec.n})")
+    model_size = _resolve_model_size(model_size, row_sharding)
+    impl = impl or _default_impl()
+    W = _sample_reconstruct_b(spec, P.astype(jnp.float32),
+                              jnp.asarray(steps, jnp.uint32), impl,
+                              int(chunks), model_size)
+    return W.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fused upload draw: probabilities in, uint32 wire lanes out.
+# ---------------------------------------------------------------------------
+
+def _pack_one(spec: QSpec, p, step, impl):
+    if impl == "pallas" and spec.window % 32 == 0:
+        return _pk.qz_sample_pack_fwd(spec, p, step)
+    from ..comm.bitpack import pack_mask
+
+    return pack_mask(_sample_one(spec, p, step))
+
+
+def _pack_many(spec: QSpec, P, steps, impl):
+    if impl == "pallas" and spec.window % 32 == 0:
+        return _pk.qz_sample_pack_batched_fwd(spec, P, steps)
+    from ..comm.bitpack import pack_mask
+
+    return pack_mask(_sample_one(spec, P, steps))
+
+
+@functools.lru_cache(maxsize=256)
+def _pack_cores(spec: QSpec, impl: str):
+    @jax.custom_batching.custom_vmap
+    def core(p, step):
+        return _pack_one(spec, p, step, impl)
+
+    @core.def_vmap
+    def _rule(axis_size, in_batched, P, steps):
+        pb, sb = in_batched
+        if not pb and not sb:
+            return _pack_one(spec, P, steps, impl), False
+        if not pb:
+            P = jnp.broadcast_to(P, (axis_size, *P.shape))
+        if not sb:
+            steps = jnp.broadcast_to(steps, (axis_size,))
+        return _pack_many(spec, P, steps, impl), True
+
+    return core
+
+
+def sample_pack(spec: QSpec, p, step, *, impl: Optional[str] = None):
+    """Fused end-of-round upload: lanes = pack(Bern(p)), uint32
+    (ceil(n/32),).  Bit-identical to
+    ``pack_mask(sample_mask_hash(p, ...))``; not differentiable (the
+    upload draw carries no gradient).  The pallas impl emits whole
+    lanes per z-window and needs ``spec.window % 32 == 0`` — smaller
+    windows fall back to the jnp oracle (same lanes either way)."""
+    impl = impl or _default_impl()
+    return _pack_cores(spec, impl)(p.astype(jnp.float32),
+                                   jnp.asarray(step, jnp.uint32))
+
+
+def sample_pack_batched(spec: QSpec, P, steps, *,
+                        impl: Optional[str] = None):
+    """Fused batched upload: P (K, n) probs -> (K, ceil(n/32)) lanes."""
+    if P.ndim != 2 or P.shape[-1] != spec.n:
+        raise ValueError(f"P has shape {P.shape}, spec expects (K, {spec.n})")
+    impl = impl or _default_impl()
+    return _pack_many(spec, P.astype(jnp.float32),
+                      jnp.asarray(steps, jnp.uint32), impl)

@@ -41,6 +41,49 @@ dominates and is K-independent).  The backward accumulates the
 transposed contraction into a ``(window, K)`` grad-z-slab with the
 same revisited-output pattern as the single-client kernel.
 
+Fused mask lifecycle (``qz_sample_reconstruct_*`` /
+``qz_sample_pack_*``): the paper's mask ``z ~ Bern(f(s))`` is n BITS,
+yet the composed pipeline materializes it as an f32 array in HBM three
+times per round — the sampling output, the reconstruction input, and
+the pre-bitpack upload draw.  The fused kernels take the *probability*
+vector ``p = f(s)`` (or the transposed ``(n, K)`` p-slab) and draw
+``z`` in-block from the counter-based hash RNG
+(``core.sampling.mask_u32``: words ``(seed, tensor_id, MASK_CTR, step,
+coord)``), so the mask only ever exists as a ``(window,)`` /
+``(window, K)`` VMEM value between the p-window DMA and the one-hot
+contraction:
+
+ - ``qz_sample_reconstruct_fwd`` (+``_batched``): p in, ``w = Q
+   Bern(p)`` out.  Identical grid/one-hot layout to the composed
+   kernels; the only extra operand is the (1,) / (K,) uint32 ``step``
+   draw-counter word, and the only extra in-block work is
+   window-sized hashing (VPU) overlapping the MXU contraction.  The
+   straight-through backward is UNCHANGED (``grad_p = Q^T grad_w``):
+   ``ops.sample_reconstruct`` reuses the composed backward kernels, so
+   fused and composed gradients are bit-identical by construction.
+ - ``qz_sample_pack_fwd`` (+``_batched``): the end-of-round upload
+   draw.  p in, ``uint32`` wire lanes out (bit j of lane i is
+   coordinate 32i+j, exactly ``comm.bitpack.pack_mask``); one grid
+   step per z-window emits ``window/32`` lanes (requires
+   ``window % 32 == 0``; smaller windows fall back to the jnp oracle
+   in ``ops``).
+
+VMEM budget for the fused batched forward at bm=256, window=512, d=8,
+K=32 (f32): p-slab 512·32·4 = 64 KiB, in-block z-slab (same shape)
+64 KiB, one-hot 256·8·512·4 = 4 MiB, zsel 256·8·32·4 = 256 KiB, out
+256·32·4 = 32 KiB — ~4.5 MiB, the one-hot still dominating and
+K-independent; K up to ~128 fits in the ~16 MiB/core budget.  Note the
+composed pipeline pays the SAME VMEM for the z-slab but also a
+``(K, n)`` f32 mask round-trip through HBM (4 bytes/coordinate where
+the wire format is 1 bit) plus the straight-through ``p + sg(z - p)``
+elementwise pass; fused, the HBM mask traffic is zero.
+
+Bit-exactness contract (tests/test_fused.py): fused ≡ composed
+(sample → reconstruct → pack) to EXACT equality, forward and gradient,
+on ref and interpret-mode Pallas, single-client, vmap-batched, and the
+shard_map federated path — both sides regenerate the identical mask
+bits from ``(seed, tensor_id, step, coord)``.
+
 Validated in interpret mode against ``ref.reconstruct_ref`` /
 ``ref.grad_z_ref`` over shape/dtype sweeps (tests/test_kernels.py) and
 against the batched ref path (tests/test_batched.py).
@@ -55,7 +98,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.hashrng import bernoulli_u32
 from ..core.qspec import QSpec, row_indices, row_values
+from ..core.sampling import mask_u32
 
 DEFAULT_BM = 256
 
@@ -226,4 +271,156 @@ def qz_reconstruct_batched_bwd(spec: QSpec, grad_W, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((spec.n, nclients), jnp.float32),
         interpret=interpret,
     )(gt)
+    return out.T
+
+
+# ---------------------------------------------------------------------------
+# Fused mask lifecycle: probabilities in, weights / wire lanes out.
+# The mask z is a transient in-block value, never an HBM array.
+# ---------------------------------------------------------------------------
+
+def _window_mask(spec: QSpec, step, p_win):
+    """Draw this grid step's z-window in-block from the hash RNG.
+
+    ``step`` is the traced uint32 draw-counter word; coordinates are
+    the window's global z indices, so the bits are identical to the
+    oracle's ``sample_mask_hash`` over the full (n,) vector.
+    """
+    i = pl.program_id(0)
+    coords = i * spec.window + jax.lax.iota(jnp.int32, spec.window)
+    if p_win.ndim == 2:  # (window, K) p-slab: one stream per client
+        u = mask_u32(spec.seed, spec.tensor_id, step[None, :],
+                     coords[:, None])
+    else:
+        u = mask_u32(spec.seed, spec.tensor_id, step, coords)
+    return bernoulli_u32(u, p_win)
+
+
+def _sfwd_kernel(p_ref, step_ref, w_ref, *, spec: QSpec, bm: int, bpw: int):
+    idx, vals = _block_rows(spec, bm, masked=False)
+    zwin = _window_mask(spec, step_ref[0], p_ref[...].astype(jnp.float32))
+    zsel = jnp.dot(_onehot(idx, spec.window), zwin,
+                   preferred_element_type=jnp.float32)
+    w_ref[...] = jnp.sum(vals * zsel.reshape(bm, spec.d), axis=-1)
+
+
+def qz_sample_reconstruct_fwd(spec: QSpec, p, step, *, bm: int = DEFAULT_BM,
+                              interpret: bool = True):
+    """Fused Pallas forward: p (n,) f32 + step word -> w (m,) f32 (flat)."""
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    out = pl.pallas_call(
+        functools.partial(_sfwd_kernel, spec=spec, bm=bm, bpw=bpw),
+        grid=(nw, bpw),
+        in_specs=[
+            pl.BlockSpec((spec.window,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i * bpw + j,)),
+        out_shape=jax.ShapeDtypeStruct((m_grid,), jnp.float32),
+        interpret=interpret,
+    )(p.astype(jnp.float32), jnp.asarray(step, jnp.uint32).reshape(1))
+    if bpw * bm != spec.rows_per_window:
+        out = out.reshape(nw, bpw * bm)[:, : spec.rows_per_window].reshape(-1)
+    return out[: spec.m]
+
+
+def _sbfwd_kernel(pt_ref, steps_ref, w_ref, *, spec: QSpec, bm: int,
+                  nclients: int):
+    idx, vals = _block_rows(spec, bm, masked=False)
+    slab = _window_mask(spec, steps_ref[...],
+                        pt_ref[...].astype(jnp.float32))  # (window, K)
+    zsel = jnp.dot(_onehot(idx, spec.window), slab,
+                   preferred_element_type=jnp.float32)
+    w_ref[...] = jnp.sum(
+        vals[..., None] * zsel.reshape(bm, spec.d, nclients), axis=1
+    )
+
+
+def qz_sample_reconstruct_batched_fwd(spec: QSpec, P, steps, *,
+                                      bm: int = DEFAULT_BM,
+                                      interpret: bool = True):
+    """Fused batched forward: P (K, n) probs + steps (K,) -> W (K, m)."""
+    nclients = P.shape[0]
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    pt = P.astype(jnp.float32).T  # (n, K) — window-major p-slabs
+    out = pl.pallas_call(
+        functools.partial(_sbfwd_kernel, spec=spec, bm=bm,
+                          nclients=nclients),
+        grid=(nw, bpw),
+        in_specs=[
+            pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0)),
+            pl.BlockSpec((nclients,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, nclients), lambda i, j: (i * bpw + j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_grid, nclients), jnp.float32),
+        interpret=interpret,
+    )(pt, jnp.asarray(steps, jnp.uint32))
+    if bpw * bm != spec.rows_per_window:
+        out = out.reshape(nw, bpw * bm, nclients)[
+            :, : spec.rows_per_window
+        ].reshape(-1, nclients)
+    return out[: spec.m].T
+
+
+def _pack_shifts():
+    return jax.lax.iota(jnp.uint32, 32)
+
+
+def _spack_kernel(p_ref, step_ref, lanes_ref, *, spec: QSpec):
+    zwin = _window_mask(spec, step_ref[0], p_ref[...].astype(jnp.float32))
+    bits = zwin.astype(jnp.uint32).reshape(spec.window // 32, 32)
+    lanes_ref[...] = jnp.sum(bits << _pack_shifts(), axis=-1,
+                             dtype=jnp.uint32)
+
+
+def qz_sample_pack_fwd(spec: QSpec, p, step, *, interpret: bool = True):
+    """Fused upload draw: p (n,) -> (n/32,) uint32 wire lanes.
+
+    Lane layout is exactly ``comm.bitpack.pack_mask`` (bit j of lane i
+    = coordinate 32i+j).  Requires ``spec.window % 32 == 0`` so each
+    grid step emits whole lanes (``ops.sample_pack`` falls back to the
+    jnp oracle otherwise).
+    """
+    assert spec.window % 32 == 0, "pallas sample_pack needs window % 32 == 0"
+    out = pl.pallas_call(
+        functools.partial(_spack_kernel, spec=spec),
+        grid=(spec.num_windows,),
+        in_specs=[
+            pl.BlockSpec((spec.window,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((spec.window // 32,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((spec.n // 32,), jnp.uint32),
+        interpret=interpret,
+    )(p.astype(jnp.float32), jnp.asarray(step, jnp.uint32).reshape(1))
+    return out
+
+
+def _sbpack_kernel(pt_ref, steps_ref, lanes_ref, *, spec: QSpec,
+                   nclients: int):
+    slab = _window_mask(spec, steps_ref[...],
+                        pt_ref[...].astype(jnp.float32))  # (window, K)
+    bits = slab.astype(jnp.uint32).reshape(spec.window // 32, 32, nclients)
+    lanes_ref[...] = jnp.sum(bits << _pack_shifts()[None, :, None], axis=1,
+                             dtype=jnp.uint32)
+
+
+def qz_sample_pack_batched_fwd(spec: QSpec, P, steps, *,
+                               interpret: bool = True):
+    """Fused batched upload draw: P (K, n) -> (K, n/32) uint32 lanes."""
+    assert spec.window % 32 == 0, "pallas sample_pack needs window % 32 == 0"
+    nclients = P.shape[0]
+    pt = P.astype(jnp.float32).T  # (n, K)
+    out = pl.pallas_call(
+        functools.partial(_sbpack_kernel, spec=spec, nclients=nclients),
+        grid=(spec.num_windows,),
+        in_specs=[
+            pl.BlockSpec((spec.window, nclients), lambda i: (i, 0)),
+            pl.BlockSpec((nclients,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((spec.window // 32, nclients),
+                               lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((spec.n // 32, nclients), jnp.uint32),
+        interpret=interpret,
+    )(pt, jnp.asarray(steps, jnp.uint32))
     return out.T

@@ -5,9 +5,11 @@ dispatch per round when driven from Python.  ``federated_fit`` carries
 R rounds through a single ``lax.scan``: one compilation per
 (R, K, E, batch) shape, one dispatch for the whole block, with the
 stacked client batches prefetched as a (R, K, E, ...) slab.  Round r
-uses key ``jax.random.split(key, R)[r]``, so a fit over R rounds is
-numerically the same computation as R sequential ``federated_round``
-calls with those keys.
+uses key ``jax.random.split(key, R)[r]`` AND round counter ``r`` —
+the scan threads the integer round index into every mask-draw word
+(the counter-based hash RNG's ``step``; see ``core.sampling``) — so a
+fit over R rounds is numerically the same computation as R sequential
+``federated_round(..., round_index=r)`` calls with those keys.
 
 ``sharded_client_fit`` is the same scan wrapped around
 ``sharded_client_update`` — the body to run inside ``shard_map`` on the
@@ -21,6 +23,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
 
 from ..core.federated import (
     FederatedConfig,
@@ -34,12 +37,14 @@ from ..optim import Optimizer
 
 def _rounds_and_keys(round_batches, key, rounds):
     """Slice the batch slab to ``rounds`` (when given) and derive one
-    subkey per round — round r always uses ``split(key, R)[r]``."""
+    subkey + round counter per round — round r always uses
+    ``split(key, R)[r]`` and ``round_index=r``."""
     r = rounds if rounds is not None else jax.tree.leaves(
         round_batches)[0].shape[0]
     if rounds is not None:
         round_batches = jax.tree.map(lambda x: x[:r], round_batches)
-    return round_batches, jax.random.split(key, r)
+    return (round_batches, jax.random.split(key, r),
+            jnp.arange(r, dtype=jnp.uint32))
 
 
 def federated_fit(
@@ -59,16 +64,16 @@ def federated_fit(
     compiles once and re-runs for any same-shape batch slab.
     ``rounds`` runs only the first ``rounds`` entries of the slab.
     """
-    round_batches, keys = _rounds_and_keys(round_batches, key, rounds)
+    round_batches, keys, rids = _rounds_and_keys(round_batches, key, rounds)
 
     def body(state, xs):
-        batches, sub = xs
+        batches, sub, rid = xs
         state, metrics = federated_round(
-            zspecs, state, loss_fn, batches, sub, cfg, opt
+            zspecs, state, loss_fn, batches, sub, cfg, opt, round_index=rid
         )
         return state, metrics
 
-    return jax.lax.scan(body, state, (round_batches, keys))
+    return jax.lax.scan(body, state, (round_batches, keys, rids))
 
 
 def sharded_client_fit(
@@ -89,15 +94,15 @@ def sharded_client_fit(
     run this INSIDE ``shard_map`` (client id = mesh position).  The key
     is replicated; every shard derives the same per-round subkeys and
     ``sharded_client_update`` folds in the axis index per client."""
-    round_batches, keys = _rounds_and_keys(round_batches, key, rounds)
+    round_batches, keys, rids = _rounds_and_keys(round_batches, key, rounds)
 
     def body(state, xs):
-        batches, sub = xs
+        batches, sub, rid = xs
         state, metrics = sharded_client_update(
             zspecs, state, loss_fn, batches, sub, cfg,
             axis_names=axis_names, opt=opt, constraints=constraints,
-            row_sharding=row_sharding,
+            row_sharding=row_sharding, round_index=rid,
         )
         return state, metrics
 
-    return jax.lax.scan(body, state, (round_batches, keys))
+    return jax.lax.scan(body, state, (round_batches, keys, rids))

@@ -1,11 +1,12 @@
 """Scan-over-rounds drivers (train.fit).
 
 ``federated_fit`` over R rounds must (a) be numerically identical to R
-sequential ``federated_round`` calls with the same per-round keys, and
-(b) trace the round body exactly once regardless of R — one compile
-per (R, K, E, batch) shape, with re-dispatch free of retracing.
-``sharded_client_fit`` is the same contract inside ``shard_map`` on
-the forced 4-device CPU mesh.
+sequential ``federated_round`` calls with the same per-round keys and
+round indices (the scan threads the round counter into the mask-draw
+words), and (b) trace the round body exactly once regardless of R —
+one compile per (R, K, E, batch) shape, with re-dispatch free of
+retracing.  ``sharded_client_fit`` is the same contract inside
+``shard_map`` on the forced 4-device CPU mesh.
 """
 
 import jax
@@ -62,13 +63,14 @@ def test_fit_matches_sequential_rounds(setup):
         assert mets[mk].shape == (R,)
 
     round_fn = jax.jit(
-        lambda s, b, k: federated_round(zspecs, s, mlp_loss, b, k, cfg)
+        lambda s, b, k, r: federated_round(zspecs, s, mlp_loss, b, k, cfg,
+                                           round_index=r)
     )
     st_seq = state
     seq_losses = []
     for r, sub in enumerate(jax.random.split(key, R)):
         b = jax.tree.map(lambda x, r=r: x[r], batches)
-        st_seq, m = round_fn(st_seq, b, sub)
+        st_seq, m = round_fn(st_seq, b, sub, jnp.uint32(r))
         seq_losses.append(float(m["loss"]))
     for p in st_fit["scores"]:
         np.testing.assert_array_equal(
@@ -158,18 +160,19 @@ def test_sharded_fit_matches_sequential(setup):
         st_fit, mets = jax.jit(f)(state, rb, key)
     assert mets["loss"].shape == (R,)
 
-    def round_body(s, b, k):
+    def round_body(s, b, k, r):
         b = jax.tree.map(lambda x: x[0], b)
-        return sharded_client_update(zspecs, s, mlp_loss, b, k, cfg)
+        return sharded_client_update(zspecs, s, mlp_loss, b, k, cfg,
+                                     round_index=r)
 
     st_seq = state
     for r, sub in enumerate(jax.random.split(key, R)):
         with mesh:
             f2 = shard_map_compat(round_body, ("data",),
-                                  (state_specs, P("data"), P()),
+                                  (state_specs, P("data"), P(), P()),
                                   (state_specs, met_specs))
             b = jax.tree.map(lambda x, r=r: x[:, r], rb)
-            st_seq, _ = jax.jit(f2)(st_seq, b, sub)
+            st_seq, _ = jax.jit(f2)(st_seq, b, sub, jnp.uint32(r))
     for p in st_fit["scores"]:
         np.testing.assert_array_equal(
             np.asarray(st_fit["scores"][p]), np.asarray(st_seq["scores"][p])
