@@ -28,7 +28,16 @@ def _dump(name, rows):
 
 
 def bench_kernel_reconstruct():
-    """Microbenchmark of the hot op (ref vs pallas-interpret on CPU)."""
+    """Microbenchmark of the hot op, one row per impl.
+
+    On CPU the 'pallas' impl runs in INTERPRET mode: its timing is a
+    correctness-path artifact (the interpreter evaluates the one-hot
+    contraction element by element), NOT kernel performance — so that
+    row is keyed ``{"impl": "pallas_interpret"}`` with
+    ``regression_comparable: False`` and must be EXCLUDED from any
+    perf-regression comparison.  Hardware Pallas numbers (a TPU run)
+    replace it under ``{"impl": "pallas"}`` when available.
+    """
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -40,8 +49,8 @@ def bench_kernel_reconstruct():
     z = jnp.asarray(
         (np.random.RandomState(0).rand(spec.n) < 0.5), jnp.float32
     )
-    out = {"bench": "kernel_qz_reconstruct"}
-    for impl in ("ref", "pallas"):
+    rows = []
+    for impl, key in (("ref", "ref"), ("pallas", "pallas_interpret")):
         f = jax.jit(lambda z_, impl=impl: ops.reconstruct(spec, z_, impl=impl))
         f(z).block_until_ready()
         t0 = time.perf_counter()
@@ -49,10 +58,14 @@ def bench_kernel_reconstruct():
         for _ in range(iters):
             f(z).block_until_ready()
         us = (time.perf_counter() - t0) / iters * 1e6
-        out[impl] = us
-        _emit(f"kernel_qz_reconstruct_{impl}", us,
+        rows.append({
+            "bench": "kernel_qz_reconstruct", "impl": key, "us": us,
+            "m": spec.m, "n": spec.n, "d": spec.d,
+            "regression_comparable": impl == "ref",
+        })
+        _emit(f"kernel_qz_reconstruct_{key}", us,
               f"m={spec.m};n={spec.n};d={spec.d}")
-    return [out]
+    return rows
 
 
 def bench_federated_round(full=False):
@@ -63,6 +76,15 @@ def bench_federated_round(full=False):
     Rows land in experiments/results/fedround.json AND are merged into
     BENCH_reconstruct.json at the repo root (the cross-PR perf
     baseline; see scripts/ci.sh).
+
+    NOTE (transpose-plan PR): the row plan is now a per-spec cached
+    CONSTANT (core.transpose_plan), so the vmap-of-single-client
+    baseline no longer pays K-times hash+Box–Muller regeneration —
+    both sides start from the same baked plan and ``speedup`` measures
+    only the contraction-strategy difference (the batched entry stays
+    the memory-bounded choice: O(m_pad·d) temporaries vs the vmap
+    mega-gather's O(K·m_pad·d)).  The headline backward comparison
+    lives in the ``bwd_transpose_plan`` rows (bench_bwd).
     """
     import jax
     import jax.numpy as jnp
@@ -125,17 +147,25 @@ def bench_federated_round(full=False):
 
 def _merge_bench_root(rows):
     """Merge benchmark rows into BENCH_reconstruct.json at the repo
-    root, keyed by (bench, K, strategy) — the perf trajectory across
-    PRs (strategy is None for the reconstruction rows)."""
+    root, keyed by (bench, K, strategy, impl, m_pad_d) — the perf
+    trajectory across PRs (unused key fields are None per bench).
+    Legacy pre-impl-keyed ``kernel_qz_reconstruct`` rows (one dict
+    holding both a ref and an interpret-mode Pallas timing as if they
+    were comparable) are dropped on sight."""
     path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_reconstruct.json")
 
     def _key(r):
-        return (r.get("bench"), r.get("K"), r.get("strategy"))
+        return (r.get("bench"), r.get("K"), r.get("strategy"),
+                r.get("impl"), r.get("m_pad_d"))
+
+    def _legacy(r):
+        return (r.get("bench") == "kernel_qz_reconstruct"
+                and "impl" not in r)
 
     try:
         with open(path) as f:
-            kept = {_key(r): r for r in json.load(f)}
+            kept = {_key(r): r for r in json.load(f) if not _legacy(r)}
     except FileNotFoundError:
         kept = {}
     except (OSError, ValueError, AttributeError, TypeError) as e:
@@ -309,6 +339,197 @@ def bench_fused(full=False):
     return rows
 
 
+def _ab_median(f_a, f_b, iters):
+    """Median us of each side, alternating runs (load drift cancels)."""
+    import jax
+    import numpy as np
+
+    jax.block_until_ready(f_a())  # compile + warm
+    jax.block_until_ready(f_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(f_b())
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta) * 1e6), float(np.median(tb) * 1e6)
+
+
+class _env:
+    """Temporarily set/unset an env var (trace-time knobs)."""
+
+    def __init__(self, name, value):
+        self.name, self.value = name, value
+
+    def __enter__(self):
+        self.prev = os.environ.get(self.name)
+        if self.value is None:
+            os.environ.pop(self.name, None)
+        else:
+            os.environ[self.name] = str(self.value)
+
+    def __exit__(self, *exc):
+        if self.prev is None:
+            os.environ.pop(self.name, None)
+        else:
+            os.environ[self.name] = self.prev
+
+
+def bench_bwd(full=False):
+    """Transpose-plan backward vs the scatter oracle (this PR's
+    tentpole): ``grad_Z = Q^T grad_W`` through the full custom_vjp
+    chain at the bench spec (m=2^20, d=8), K clients, CPU ref path.
+
+    The two paths are traced under their ``REPRO_BWD_PLAN`` gate (read
+    at trace time; fresh closures -> fresh traces) and timed
+    INTERLEAVED; allclose plan-vs-scatter is asserted before timing.
+
+    ``scatter_bwd_us`` / ``plan_bwd_us`` time the PURE backward (the
+    ``_bwd_many`` dispatch the custom_vjp invokes) so ``bwd_speedup``
+    is not diluted by the shared forward that ``jax.grad`` would also
+    evaluate; ``grad_scatter_us`` / ``grad_plan_us`` keep the full
+    fwd+bwd grad-chain numbers for continuity with the PR-1
+    ``federated_round_reconstruct`` *_bwd_us baseline rows.  Rows land
+    in BENCH_reconstruct.json as ``bwd_transpose_plan`` keyed
+    (bench, K); scripts/ci.sh requires them and fails if the plan
+    path's ``bwd_speedup`` regresses below 1.0.
+    """
+    import functools as _ft
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.qspec import make_qspec
+    from repro.kernels import ops
+
+    spec = make_qspec(0, (1024, 1024), 1024, compression=32, d=8, window=512)
+    rows = []
+    for K in (4, 10, 32):
+        Z = jnp.asarray(
+            (np.random.RandomState(0).rand(K, spec.n) < 0.5), jnp.float32
+        )
+        V = jnp.asarray(
+            np.random.RandomState(1).randn(K, *spec.shape), jnp.float32
+        )
+
+        def make_bwd():
+            # the exact transpose dispatch the custom_vjp bwd invokes;
+            # a fresh closure per gate: the trace re-reads REPRO_BWD_PLAN
+            return jax.jit(
+                lambda G_: ops._bwd_many(spec, G_, "ref", 1, None)
+            )
+
+        def make_grad():
+            g = jax.jit(jax.grad(
+                lambda Z_, v: jnp.vdot(ops.reconstruct_batched(spec, Z_),
+                                       v)
+            ))
+            return _ft.partial(g, v=V)
+
+        with _env("REPRO_BWD_PLAN", "scatter"):
+            b_scatter, g_scatter = make_bwd(), make_grad()
+            # compile INSIDE the gate block: jit traces (and reads the
+            # env) at first call, not at wrapper creation
+            out_scatter = np.asarray(b_scatter(V))
+            jax.block_until_ready(g_scatter(Z))
+        with _env("REPRO_BWD_PLAN", "plan"):
+            b_plan, g_plan = make_bwd(), make_grad()
+            out_plan = np.asarray(b_plan(V))
+            jax.block_until_ready(g_plan(Z))
+            f_fwd = jax.jit(lambda Z_: ops.reconstruct_batched(spec, Z_))
+            jax.block_until_ready(f_fwd(Z))
+        np.testing.assert_allclose(out_plan, out_scatter, rtol=1e-4,
+                                   atol=1e-4)
+        iters = 10 if full else 3
+        scatter_us, plan_us = _ab_median(
+            lambda: b_scatter(V), lambda: b_plan(V), iters)
+        grad_scatter_us, grad_plan_us = _ab_median(
+            lambda: g_scatter(Z), lambda: g_plan(Z), iters)
+        f_fwd(Z).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            f_fwd(Z).block_until_ready()
+        fwd_us = (time.perf_counter() - t0) / iters * 1e6
+        out = {
+            "bench": "bwd_transpose_plan", "K": K, "m": spec.m,
+            "n": spec.n, "d": spec.d,
+            "scatter_bwd_us": scatter_us, "plan_bwd_us": plan_us,
+            "bwd_speedup": scatter_us / plan_us,
+            "grad_scatter_us": grad_scatter_us,
+            "grad_plan_us": grad_plan_us,
+            "grad_speedup": grad_scatter_us / grad_plan_us,
+            "fwd_us": fwd_us, "bwd_fwd_ratio_plan": plan_us / fwd_us,
+        }
+        _emit(f"bwd_transpose_plan_K{K}", plan_us,
+              f"scatter={scatter_us:.0f}us"
+              f";bwd_speedup={out['bwd_speedup']:.2f}x"
+              f";grad_speedup={out['grad_speedup']:.2f}x"
+              f";bwd:fwd={out['bwd_fwd_ratio_plan']:.2f}")
+        rows.append(out)
+    return rows
+
+
+def bench_threshold(full=False):
+    """Re-measure the ``REPRO_BATCH_MAP_THRESHOLD`` crossover (ROADMAP
+    open item) now that the backward no longer dominates: force each
+    batched contraction strategy via the env var across spec sizes
+    spanning the default threshold (m_pad·d = 2e6) and time fwd and
+    the (plan) bwd.  The threshold also gates the plan backward's
+    lax.map-vs-broadcast choice, so both directions are reported.
+    Rows keyed (bench, K, strategy, m_pad_d) in BENCH_reconstruct.json.
+    """
+    import functools as _ft
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.qspec import make_qspec
+    from repro.kernels import ops
+
+    K = 10
+    rows = []
+    for shape in ((256, 256), (512, 512), (1024, 1024)):
+        spec = make_qspec(0, shape, shape[0], compression=32, d=8,
+                          window=512)
+        Z = jnp.asarray(
+            (np.random.RandomState(0).rand(K, spec.n) < 0.5), jnp.float32
+        )
+        V = jnp.asarray(
+            np.random.RandomState(1).randn(K, *spec.shape), jnp.float32
+        )
+        for strategy, thresh in (("fused", 1 << 62), ("lax_map", 1)):
+            with _env("REPRO_BATCH_MAP_THRESHOLD", thresh):
+                f = jax.jit(lambda Z_: ops.reconstruct_batched(spec, Z_))
+                g = _ft.partial(jax.jit(jax.grad(
+                    lambda Z_, v: jnp.vdot(
+                        ops.reconstruct_batched(spec, Z_), v)
+                )), v=V)
+                jax.block_until_ready(f(Z))
+                jax.block_until_ready(g(Z))
+                iters = 10 if full else 3
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    f(Z).block_until_ready()
+                fwd_us = (time.perf_counter() - t0) / iters * 1e6
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    g(Z).block_until_ready()
+                bwd_us = (time.perf_counter() - t0) / iters * 1e6
+            rows.append({
+                "bench": "batch_map_threshold", "K": K,
+                "strategy": strategy, "m_pad_d": spec.m_pad * spec.d,
+                "m": spec.m, "n": spec.n, "d": spec.d,
+                "fwd_us": fwd_us, "bwd_us": bwd_us,
+            })
+            _emit(f"batch_map_threshold_{strategy}_mpd{spec.m_pad * spec.d}",
+                  fwd_us, f"bwd={bwd_us:.0f}us;K={K}")
+    return rows
+
+
 def bench_table1(full=False):
     from repro.experiments import comm_savings_table
 
@@ -419,6 +640,8 @@ BENCHES = {
     "kernel": lambda full: bench_kernel_reconstruct(),
     "fedround": bench_federated_round,
     "fused": bench_fused,
+    "bwd": bench_bwd,
+    "threshold": bench_threshold,
     "wire": bench_wire,
     "wire_formats": bench_wire_formats,
     "table1": bench_table1,
@@ -443,7 +666,8 @@ def main() -> None:
         try:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
-            if name in ("kernel", "fedround", "fused", "wire"):
+            if name in ("kernel", "fedround", "fused", "bwd", "threshold",
+                        "wire"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

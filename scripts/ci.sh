@@ -53,10 +53,40 @@ if not {10, 32} <= ks or bad:
              f"K={sorted(ks)} (need 10 and 32); rows missing keys: {bad}. "
              f"Run `python -m benchmarks.run --only fused` and commit.")
 print(f"  ok: {len(fused)} fused rows, K={sorted(ks)}")
+
+# transpose-plan backward rows: the plan path must be present for
+# K in {10, 32} and must not regress below the scatter oracle
+# (bwd_speedup >= 1.0).  NOTE the kernel_qz_reconstruct row keyed
+# {"impl": "pallas_interpret"} is interpreter timing, NOT kernel perf
+# — it is regression_comparable: false and excluded from every gate.
+BWD_KEYS = {"scatter_bwd_us", "plan_bwd_us", "bwd_speedup", "fwd_us", "K"}
+bwd = [r for r in rows if r.get("bench") == "bwd_transpose_plan"]
+ks = {r.get("K") for r in bwd}
+bad = [r for r in bwd if not BWD_KEYS <= set(r)]
+slow = [r for r in bwd if r.get("bwd_speedup", 0) < 1.0]
+if not {10, 32} <= ks or bad or slow:
+    sys.exit(f"BENCH_reconstruct.json is stale or regressed: plan-bwd "
+             f"rows for K={sorted(ks)} (need 10 and 32); missing keys: "
+             f"{bad}; bwd_speedup < 1.0 (plan slower than scatter): "
+             f"{slow}. Run `python -m benchmarks.run --only bwd` and "
+             f"commit.")
+print(f"  ok: {len(bwd)} plan-bwd rows, K={sorted(ks)}, min speedup "
+      f"{min(r['bwd_speedup'] for r in bwd):.2f}x")
+
+# batch-map threshold sweep rows (ROADMAP crossover re-measure): both
+# forced strategies must be present so the tuned constant stays
+# verifiable.
+thr = [r for r in rows if r.get("bench") == "batch_map_threshold"]
+strat = {r.get("strategy") for r in thr}
+if not {"fused", "lax_map"} <= strat:
+    sys.exit(f"BENCH_reconstruct.json is stale: batch_map_threshold "
+             f"strategies {sorted(strat)} (need fused and lax_map). "
+             f"Run `python -m benchmarks.run --only threshold` and commit.")
+print(f"  ok: {len(thr)} threshold rows, strategies {sorted(strat)}")
 EOF
 
-echo "== reconstruction + fused + wire benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,wire
+echo "== reconstruction + fused + bwd + wire benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -77,4 +107,9 @@ for r in rows:
               f"vs composed {r['fwd_composed_us']/1e3:8.1f}ms "
               f"({r['fwd_speedup']:.3f}x); lifecycle "
               f"{r['lifecycle_speedup']:.3f}x")
+    elif r.get("bench") == "bwd_transpose_plan":
+        print(f"  bwd  K={r['K']:>3}: plan {r['plan_bwd_us']/1e3:8.1f}ms "
+              f"vs scatter {r['scatter_bwd_us']/1e3:8.1f}ms "
+              f"({r['bwd_speedup']:.2f}x); bwd:fwd "
+              f"{r['bwd_fwd_ratio_plan']:.2f}")
 EOF

@@ -9,6 +9,15 @@ from .federated import (
 )
 from .qspec import QSpec, make_qspec, row_indices, row_values
 from .reconstruct import materialize_q, reconstruct_ref
+from .transpose_plan import (
+    TransposePlan,
+    build_block_plan,
+    build_transpose_plan,
+    default_bwd_path,
+    resolve_bwd_path,
+    row_plan,
+    set_default_bwd_path,
+)
 from .sampling import (
     as_word,
     clip_probs,
@@ -40,7 +49,9 @@ from .zampling import (
 __all__ = [
     "FederatedConfig", "federated_round", "local_update", "mask_program",
     "sharded_client_update", "QSpec", "make_qspec", "row_indices",
-    "row_values", "materialize_q", "reconstruct_ref", "as_word",
+    "row_values", "materialize_q", "reconstruct_ref", "TransposePlan",
+    "build_block_plan", "build_transpose_plan", "default_bwd_path",
+    "resolve_bwd_path", "row_plan", "set_default_bwd_path", "as_word",
     "clip_probs", "discretize_mask", "expected_mask", "fold_word",
     "init_scores", "key_word", "mask_u32", "sample_mask",
     "sample_mask_hash", "sample_mask_st", "sample_mask_st_hash",

@@ -18,6 +18,18 @@ A ``jax.custom_vjp`` ties forward and backward together so both
 directions use the same impl and the straight-through chain
 ``grad_s = Q^T grad_w ⊙ 1_{0<p<1}`` (paper §1.3) falls out of autodiff.
 
+Transpose path: every backward branch (ref, chunked, pallas, sharded)
+additionally dispatches plan-vs-scatter via
+``core.transpose_plan.resolve_bwd_path()`` (env ``REPRO_BWD_PLAN``,
+read at trace time; the custom_vjp/custom_vmap signatures are
+unchanged).  'plan' (default) computes ``grad_z = Q^T grad_w`` as a
+gather + reduction over the cached per-spec transpose plan — measured
+>2x over the scatter oracle at K∈{10,32} on the CPU ref path
+(``bwd_transpose_plan`` rows in BENCH_reconstruct.json); 'scatter' is
+the bit-exactness oracle.  The chunked plan path chunks over WINDOWS
+(each chunk owns a contiguous ``g_pad`` slice) instead of rows,
+bounding temporaries at O(n·deg/chunks).
+
 Batching-aware dispatch: every impl above also has a natively-batched
 variant that takes ``Z (K, n)`` (K stacked clients) and regenerates
 Q's hash-RNG indices/values ONCE instead of per client —
@@ -63,6 +75,11 @@ import numpy as np
 
 from ..core.qspec import QSpec, padded_row_window, row_indices, row_values
 from ..core.sampling import sample_mask_hash
+from ..core.transpose_plan import (
+    build_transpose_plan,
+    plan_window_apply,
+    resolve_bwd_path,
+)
 from ..core.reconstruct import (
     _insert_padding,
     _insert_padding_batched,
@@ -187,6 +204,71 @@ def _grad_chunked(spec: QSpec, g, chunks: int):
     return gz
 
 
+def _plan_chunk_tables(spec: QSpec, chunks: int, order: str):
+    """The transpose plan split into window-chunks (trace constants).
+
+    Returns (rows (nc, wpc, window·deg), vals (nc, wpc, window, deg),
+    deg, wpc, pad_windows) with the window axis zero-padded to a
+    multiple of wpc so a ``lax.map`` can scan it.
+    """
+    plan = build_transpose_plan(spec, order)
+    nw = spec.num_windows
+    wpc = -(-nw // chunks)
+    nc = -(-nw // wpc)
+    rows = plan.rows.reshape(nw, spec.window * plan.deg)
+    vals = plan.vals
+    pad = nc * wpc - nw
+    if pad:
+        rows = np.pad(rows, ((0, pad), (0, 0)))
+        vals = np.pad(vals, ((0, pad), (0, 0), (0, 0)))
+    return (
+        jnp.asarray(rows.reshape(nc, wpc, spec.window * plan.deg)),
+        jnp.asarray(vals.reshape(nc, wpc, spec.window, plan.deg)),
+        plan.deg, wpc, pad,
+    )
+
+
+def _grad_chunked_plan(spec: QSpec, g, chunks: int, order: str):
+    """Window-chunked plan gather: per-chunk GATHER TEMPORARIES are
+    bounded to O(n·deg/chunks) — each window-chunk owns a contiguous
+    g_pad slice, so no cross-chunk accumulation is needed.  Note the
+    plan slab itself stays resident as one static constant (see the
+    memory-profile note on ``_bwd_one``)."""
+    rows_c, vals_c, deg, wpc, pad = _plan_chunk_tables(spec, chunks, order)
+    g_pad = _insert_padding(spec, _move(spec, g.astype(jnp.float32)))
+    g_pad = jnp.pad(g_pad, (0, pad * spec.rows_per_window))
+    g_c = g_pad.reshape(rows_c.shape[0], wpc * spec.rows_per_window)
+
+    def one(xs):
+        r, v, gc = xs
+        return plan_window_apply(spec, r, v, deg, gc, wpc)
+
+    return jax.lax.map(one, (rows_c, vals_c, g_c)).reshape(-1)[: spec.n]
+
+
+def _grad_chunked_batched_plan(spec: QSpec, G, chunks: int, order: str):
+    """Batched window-chunked plan gather: one chunk's tables feed all
+    K clients; per-chunk temporaries stay at O((n·deg + K·n)/chunks)."""
+    rows_c, vals_c, deg, wpc, pad = _plan_chunk_tables(spec, chunks, order)
+    k = G.shape[0]
+    g_pad = _insert_padding_batched(
+        spec, _move_batched(spec, G.astype(jnp.float32))
+    )
+    g_pad = jnp.pad(g_pad, ((0, 0), (0, pad * spec.rows_per_window)))
+    g_c = jnp.moveaxis(
+        g_pad.reshape(k, rows_c.shape[0], wpc * spec.rows_per_window), 1, 0
+    )
+
+    def one(xs):
+        r, v, gc = xs  # gc (K, wpc·rpw)
+        return jax.lax.map(
+            lambda gk: plan_window_apply(spec, r, v, deg, gk, wpc), gc
+        )
+
+    out = jax.lax.map(one, (rows_c, vals_c, g_c))  # (nc, K, wpc·window)
+    return jnp.moveaxis(out, 1, 0).reshape(k, -1)[:, : spec.n]
+
+
 def _grad_chunked_batched(spec: QSpec, G, chunks: int):
     """Batched row-chunked Q^T G: one chunk-plan generation feeds all K
     per-client scatter-adds; temporaries stay at O(rpc·d + K·rpc)."""
@@ -233,13 +315,24 @@ def _fwd_one(spec: QSpec, z, impl, chunks, model_size):
 
 
 def _bwd_one(spec: QSpec, g, impl, chunks, model_size):
+    # Memory profile of the plan backward: the cached plan slab
+    # (O(n·deg) rows+vals) is static read-only data, resident once per
+    # (spec, order) — chunking bounds the per-chunk GATHER temporaries
+    # only.  A caller that needs the scatter path's strict O(rpc·d)
+    # footprint (no resident slab) gates REPRO_BWD_PLAN=scatter.
     if model_size is not None and spec.shard_count > 1:
         from .qz_sharded import sharded_grad_z
 
         return sharded_grad_z(spec, g.astype(jnp.float32), model_size)
+    kind, order = resolve_bwd_path()
     if impl == "pallas":
+        if kind == "plan":
+            return _pk.qz_reconstruct_bwd_plan(spec, _move(spec, g),
+                                               order=order)
         return _pk.qz_reconstruct_bwd(spec, _move(spec, g))
     if chunks > 1:
+        if kind == "plan":
+            return _grad_chunked_plan(spec, g, chunks, order)
         return _grad_chunked(spec, g, chunks)
     return grad_z_ref(spec, g)
 
@@ -264,9 +357,16 @@ def _bwd_many(spec: QSpec, G, impl, chunks, model_size):
 
         return sharded_grad_z_batched(spec, G.astype(jnp.float32),
                                       model_size)
+    kind, order = resolve_bwd_path()
     if impl == "pallas":
+        if kind == "plan":
+            return _pk.qz_reconstruct_batched_bwd_plan(
+                spec, _move_batched(spec, G), order=order
+            )
         return _pk.qz_reconstruct_batched_bwd(spec, _move_batched(spec, G))
     if chunks > 1:
+        if kind == "plan":
+            return _grad_chunked_batched_plan(spec, G, chunks, order)
         return _grad_chunked_batched(spec, G, chunks)
     return grad_z_batched_ref(spec, G)
 

@@ -13,9 +13,29 @@ TPU-native design (DESIGN.md §3):
    that maps onto the MXU instead of relying on VPU dynamic gather
    support.  bm=256, window=512, d=8 ⇒ 4 MiB of one-hot bf16 in VMEM.
 
-The backward kernel computes ``grad_z = Q^T grad_w`` with the transposed
-one-hot contraction, accumulating over the ``j`` (inner) grid dimension
-into the same z-window output block (revisited-output pattern).
+The backward ``grad_z = Q^T grad_w`` has two kernels, gated like the
+ref path by ``core.transpose_plan.resolve_bwd_path()`` (env
+``REPRO_BWD_PLAN``; ``kernels.ops`` dispatches):
+
+ - PLAN (default, ``qz_reconstruct_bwd_plan``): the cached per-spec
+   transpose plan re-binned to this grid (``build_block_plan``): cell
+   (window i, row-block j, coordinate c) carries the degree-padded
+   incoming edges whose source row lies in rows [j·bm, (j+1)·bm) of
+   window i, rows stored BLOCK-relative.  The (window·deg) gather of
+   grad_w maps onto the same one-hot MXU contraction as the forward —
+   ``onehot(src_rows) (window·deg, bm) @ g (bm,)`` — followed by a
+   vals-multiply and deg-axis reduction; the plan slab (rows + vals,
+   the only extra operands) rides in with its own BlockSpec.  Edge
+   order inside a cell follows the plan's ordering contract
+   ('canonical' = by source row), but blocks still accumulate over the
+   ``j`` grid dimension, so the Pallas plan path is its OWN ordering
+   mode: deterministic and exactly reproducible per (spec, bm), and
+   ``allclose`` vs the ref plan / scatter paths.
+ - SCATTER (oracle, ``qz_reconstruct_bwd``): the transposed one-hot
+   contraction ``contrib (bm·d,) @ onehot (bm·d, window)``.
+
+Both accumulate over the ``j`` (inner) grid dimension into the same
+z-window output block (revisited-output pattern).
 
 Batched multi-client kernels (``qz_reconstruct_batched_fwd/bwd``):
 the federated round simulates K clients per host, each reconstructing
@@ -101,6 +121,7 @@ from jax.experimental import pallas as pl
 from ..core.hashrng import bernoulli_u32
 from ..core.qspec import QSpec, row_indices, row_values
 from ..core.sampling import mask_u32
+from ..core.transpose_plan import build_block_plan
 
 DEFAULT_BM = 256
 
@@ -271,6 +292,110 @@ def qz_reconstruct_batched_bwd(spec: QSpec, grad_W, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((spec.n, nclients), jnp.float32),
         interpret=interpret,
     )(gt)
+    return out.T
+
+
+# ---------------------------------------------------------------------------
+# Plan-driven backward: the transpose as an in-block GATHER over the
+# cached block plan (see module docstring and core.transpose_plan).
+# ---------------------------------------------------------------------------
+
+def _plan_operands(spec: QSpec, bm: int, order: str):
+    """Block-plan slabs as jnp constants + their shared BlockSpec."""
+    plan = build_block_plan(spec, bm, order)
+    bspec = pl.BlockSpec((1, 1, spec.window, plan.deg),
+                         lambda i, j: (i, j, 0, 0))
+    return jnp.asarray(plan.rows), jnp.asarray(plan.vals), plan.deg, bspec
+
+
+def _bwd_plan_kernel(g_ref, rows_ref, vals_ref, gz_ref, *, spec: QSpec,
+                     bm: int, deg: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        gz_ref[...] = jnp.zeros_like(gz_ref)
+
+    rows = rows_ref[...].reshape(spec.window * deg, 1)  # block-relative
+    onehot = (rows == jax.lax.iota(jnp.int32, bm)[None, :]).astype(
+        jnp.float32
+    )
+    g = g_ref[...].astype(jnp.float32)  # (bm,)
+    # the (window·deg) gather as the one-hot MXU contraction
+    gsel = jnp.dot(onehot, g, preferred_element_type=jnp.float32)
+    vals = vals_ref[...].reshape(spec.window, deg)
+    gz_ref[...] += jnp.sum(vals * gsel.reshape(spec.window, deg), axis=-1)
+
+
+def qz_reconstruct_bwd_plan(spec: QSpec, grad_w, *, bm: int = DEFAULT_BM,
+                            interpret: bool = True,
+                            order: str = "canonical"):
+    """Plan-driven Pallas backward: grad_w (m,) -> grad_z (n,) f32."""
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    rows, vals, deg, bspec = _plan_operands(spec, bm, order)
+    g = grad_w.reshape(-1).astype(jnp.float32)
+    g = jnp.pad(g, (0, spec.m_pad - spec.m))
+    if bpw * bm != spec.rows_per_window:
+        g = g.reshape(nw, spec.rows_per_window)
+        g = jnp.pad(g, ((0, 0), (0, bpw * bm - spec.rows_per_window)))
+        g = g.reshape(-1)
+    return pl.pallas_call(
+        functools.partial(_bwd_plan_kernel, spec=spec, bm=bm, deg=deg),
+        grid=(nw, bpw),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i * bpw + j,)),
+            bspec, bspec,
+        ],
+        out_specs=pl.BlockSpec((spec.window,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((spec.n,), jnp.float32),
+        interpret=interpret,
+    )(g, rows, vals)
+
+
+def _bbwd_plan_kernel(g_ref, rows_ref, vals_ref, gz_ref, *, spec: QSpec,
+                      bm: int, deg: int, nclients: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        gz_ref[...] = jnp.zeros_like(gz_ref)
+
+    rows = rows_ref[...].reshape(spec.window * deg, 1)
+    onehot = (rows == jax.lax.iota(jnp.int32, bm)[None, :]).astype(
+        jnp.float32
+    )
+    g = g_ref[...].astype(jnp.float32)  # (bm, K)
+    # one one-hot, K clients: (window·deg, bm) @ (bm, K)
+    gsel = jnp.dot(onehot, g, preferred_element_type=jnp.float32)
+    vals = vals_ref[...].reshape(spec.window, deg)
+    gz_ref[...] += jnp.sum(
+        vals[:, :, None] * gsel.reshape(spec.window, deg, nclients), axis=1
+    )
+
+
+def qz_reconstruct_batched_bwd_plan(spec: QSpec, grad_W, *,
+                                    bm: int = DEFAULT_BM,
+                                    interpret: bool = True,
+                                    order: str = "canonical"):
+    """Plan-driven batched backward: grad_W (K, m) -> grad_Z (K, n)."""
+    nclients = grad_W.shape[0]
+    nw, bpw, m_grid = _grid_dims(spec, bm)
+    rows, vals, deg, bspec = _plan_operands(spec, bm, order)
+    g = grad_W.reshape(nclients, -1).astype(jnp.float32)
+    g = jnp.pad(g, ((0, 0), (0, spec.m_pad - spec.m)))
+    if bpw * bm != spec.rows_per_window:
+        g = g.reshape(nclients, nw, spec.rows_per_window)
+        g = jnp.pad(g, ((0, 0), (0, 0),
+                        (0, bpw * bm - spec.rows_per_window)))
+    gt = g.reshape(nclients, m_grid).T  # (m_grid, K)
+    out = pl.pallas_call(
+        functools.partial(_bbwd_plan_kernel, spec=spec, bm=bm, deg=deg,
+                          nclients=nclients),
+        grid=(nw, bpw),
+        in_specs=[
+            pl.BlockSpec((bm, nclients), lambda i, j: (i * bpw + j, 0)),
+            bspec, bspec,
+        ],
+        out_specs=pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((spec.n, nclients), jnp.float32),
+        interpret=interpret,
+    )(gt, rows, vals)
     return out.T
 
 

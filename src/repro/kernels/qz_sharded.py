@@ -25,6 +25,19 @@ the chunk's hash-RNG indices/values; z rides as a (K, n_loc) slab per
 shard and the per-chunk temporaries stay bounded at
 O(rpc·d + K·rpc) — the chunk count scales with K so the budget in
 TARGET_CHUNK_BYTES holds for any K.
+
+Transpose path: ``sharded_grad_z`` / ``sharded_grad_z_batched``
+dispatch plan-vs-scatter like the global ref path
+(``core.transpose_plan.resolve_bwd_path``, env ``REPRO_BWD_PLAN``).
+The cached transpose plan is shard-local BY CONSTRUCTION: all edges
+into window ``w``'s coordinates come from window ``w``'s rows, and the
+sharding-major layout gives each shard a contiguous block of windows —
+so the (num_windows, window, deg) plan slabs enter the shard_map as
+operands sharded ``P('model')`` on the window axis and each shard
+gathers purely locally (zero collectives, same as the forward).
+Window-chunking (``lax.map``) keeps per-chunk temporaries inside
+TARGET_CHUNK_BYTES; the scatter chunks stay as the bit-exactness
+oracle.
 """
 
 from __future__ import annotations
@@ -35,6 +48,11 @@ from jax.sharding import PartitionSpec as P
 
 from ..comm.shardmap import shard_map_compat
 from ..core.qspec import QSpec, row_indices, row_values
+from ..core.transpose_plan import (
+    build_transpose_plan,
+    plan_window_apply,
+    resolve_bwd_path,
+)
 
 AXIS = "model"
 
@@ -151,11 +169,97 @@ def sharded_reconstruct_batched(spec: QSpec, Z, ms: int):
     )
 
 
+# ---------------------------------------------------------------------------
+# Plan-path transpose: shard-local gather over the cached plan slabs.
+# ---------------------------------------------------------------------------
+
+def _plan_num_chunks(spec: QSpec, deg: int) -> int:
+    """Window-chunk count bounding the (wpc·window·deg) gather temps."""
+    per_win = spec.window * deg * 12  # rows + vals + gathered f32
+    return max(1, min(spec.nw_loc,
+                      (spec.nw_loc * per_win) // TARGET_CHUNK_BYTES))
+
+
+def _plan_local(spec: QSpec, rows_l, vals_l, deg: int, g_pad):
+    """One shard's grad_z: gather + deg-reduce over its local windows.
+
+    ``rows_l`` (nw_loc, window·deg) block-local source rows, ``vals_l``
+    (nw_loc, window, deg), ``g_pad`` (m_pad_loc,).  Window-chunked via
+    ``lax.map`` when the gather temporaries exceed TARGET_CHUNK_BYTES.
+    """
+    nw_loc, rpw = spec.nw_loc, spec.rows_per_window
+    nc = _plan_num_chunks(spec, deg)
+    if nc == 1:
+        return plan_window_apply(spec, rows_l, vals_l, deg, g_pad, nw_loc)
+    wpc = -(-nw_loc // nc)
+    nc = -(-nw_loc // wpc)
+    pad = nc * wpc - nw_loc
+    rows_c = jnp.pad(rows_l, ((0, pad), (0, 0))).reshape(nc, wpc, -1)
+    vals_c = jnp.pad(vals_l, ((0, pad), (0, 0), (0, 0))).reshape(
+        nc, wpc, spec.window, deg
+    )
+    g_c = jnp.pad(g_pad, (0, pad * rpw)).reshape(nc, wpc * rpw)
+    out = jax.lax.map(
+        lambda xs: plan_window_apply(spec, xs[0], xs[1], deg, xs[2], wpc),
+        (rows_c, vals_c, g_c),
+    )
+    return out.reshape(-1)[: nw_loc * spec.window]
+
+
+def _plan_operands(spec: QSpec, order: str):
+    """Global plan slabs (jnp) + deg; shard_map slices the window axis."""
+    plan = build_transpose_plan(spec, order)
+    rows = jnp.asarray(plan.rows.reshape(spec.num_windows, -1))
+    return rows, jnp.asarray(plan.vals), plan.deg
+
+
+def _sharded_grad_z_plan(spec: QSpec, grad_w, order: str):
+    rows, vals, deg = _plan_operands(spec, order)
+
+    def local(gl, rows_l, vals_l):
+        gm = jnp.moveaxis(gl, spec.major_axis, 0).reshape(-1)
+        g_pad = jnp.pad(gm.astype(jnp.float32),
+                        (0, spec.m_pad_loc - spec.m_blk))
+        return _plan_local(spec, rows_l, vals_l, deg, g_pad)
+
+    return _shard_map(
+        local,
+        (_out_spec(spec), P(AXIS, None), P(AXIS, None, None)),
+        P(AXIS),
+    )(grad_w, rows, vals)
+
+
+def _sharded_grad_z_batched_plan(spec: QSpec, grad_W, order: str):
+    rows, vals, deg = _plan_operands(spec, order)
+
+    def local(gl, rows_l, vals_l):  # gl (K, local tensor block)
+        k = gl.shape[0]
+        gm = jnp.moveaxis(gl, spec.major_axis + 1, 1).reshape(k, -1)
+        g_pad = jnp.pad(gm.astype(jnp.float32),
+                        ((0, 0), (0, spec.m_pad_loc - spec.m_blk)))
+        return jax.lax.map(
+            lambda g: _plan_local(spec, rows_l, vals_l, deg, g), g_pad
+        )
+
+    return _shard_map(
+        local,
+        (_out_spec_b(spec), P(AXIS, None), P(AXIS, None, None)),
+        P(None, AXIS),
+    )(grad_W, rows, vals)
+
+
 def sharded_grad_z(spec: QSpec, grad_w, ms: int):
     """Q^T g; g has spec.shape (any sharding — in_specs reshards to the
     major axis); returns (n,) f32 sharded P('model'). Zero collectives
-    beyond the input reshard (none when g is already major-sharded)."""
+    beyond the input reshard (none when g is already major-sharded).
+
+    Dispatches plan (shard-local gather) vs scatter (oracle) via
+    ``resolve_bwd_path()``.
+    """
     _check(spec, ms)
+    kind, order = resolve_bwd_path()
+    if kind == "plan":
+        return _sharded_grad_z_plan(spec, grad_w, order)
 
     def local(gl):
         gm = jnp.moveaxis(gl, spec.major_axis, 0).reshape(-1)  # (m_blk,)
@@ -181,8 +285,12 @@ def sharded_grad_z(spec: QSpec, grad_w, ms: int):
 def sharded_grad_z_batched(spec: QSpec, grad_W, ms: int):
     """Q^T g per client; ``grad_W``: (K, *spec.shape); returns (K, n)
     f32 sharded P(None, 'model').  One generation of the chunk
-    indices/values feeds all K per-client scatter-adds."""
+    indices/values (scatter) or one shared plan slab (plan, default)
+    feeds all K clients; dispatch via ``resolve_bwd_path()``."""
     _check(spec, ms)
+    kind, order = resolve_bwd_path()
+    if kind == "plan":
+        return _sharded_grad_z_batched_plan(spec, grad_W, order)
 
     def local(gl):  # (K, local tensor block)
         k = gl.shape[0]
