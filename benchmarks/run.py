@@ -339,6 +339,101 @@ def bench_fused(full=False):
     return rows
 
 
+def bench_downlink(full=False):
+    """Downlink codec subsystem (this PR's tentpole): a real federated
+    round per registered codec with the ENCODED scores as the carried
+    state, reporting metered downlink bytes and round wall-clock.
+
+    Bit-exactness asserted pre-timing: (a) the ``f32`` codec is the
+    identity oracle — its encode returns the input arrays unchanged,
+    so those rounds are bit-identical to the pre-codec protocol; (b)
+    for the quantized codecs the widened-threshold integer draw equals
+    the f32 draw on the decoded probabilities EXACTLY
+    (``sample_mask_qhash`` vs ``sample_mask_hash``), and a round fed
+    the u8 carry runs the vmap path to finite loss.
+
+    Byte columns are MASK-ONLY (``score_downlink_bytes``, symmetric
+    with bench_wire's ``mask_uplink_bytes``): u8 is exactly 1/4 of
+    f32 per coordinate — the ci.sh gate requires <= 1/4.  Rows land in
+    BENCH_reconstruct.json keyed (bench, K, strategy=codec).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.downlink import codec_names, get_codec
+    from repro.comm.metering import score_downlink_bytes
+    from repro.core import (
+        FederatedConfig, ZamplingConfig, build_specs, encode_state,
+        init_state,
+    )
+    from repro.core.federated import federated_round
+    from repro.core.qspec import make_qspec
+    from repro.core.sampling import sample_mask_hash, sample_mask_qhash
+    from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
+    from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_loss
+
+    # draw-word exactness gate (quantized codecs), before any timing
+    spec = make_qspec(0, (256, 256), 256, compression=8, d=8, window=128)
+    rng = np.random.RandomState(0)
+    for name in codec_names(include_aliases=False):
+        codec = get_codec(name)
+        if not codec.quantized:
+            p = jnp.asarray(rng.rand(spec.n), jnp.float32)
+            out = codec.encode(spec, p, jnp.uint32(3))
+            np.testing.assert_array_equal(np.asarray(out), np.asarray(p))
+            continue
+        q = jnp.asarray(
+            rng.randint(0, 1 << codec.bits, spec.n), codec.wire_dtype
+        )
+        a = np.asarray(sample_mask_qhash(q, codec.bits, spec.seed,
+                                         spec.tensor_id, jnp.uint32(9)))
+        b = np.asarray(sample_mask_hash(codec.decode(spec, q), spec.seed,
+                                        spec.tensor_id, jnp.uint32(9)))
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"{name} integer draw not bit-exact vs decoded f32"
+        )
+
+    ds = make_teacher_dataset(n_train=2000, n_test=200, seed=0)
+    template = init_mlp_params(jax.random.PRNGKey(0), SMALL_DIMS)
+    zspecs = build_specs(template, ZamplingConfig(
+        compression=8.0, d=10, window=128, min_size=128))
+    state0 = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
+    n = zspecs.n_total
+    f32_down = score_downlink_bytes(get_codec("f32"), n)
+    rows = []
+    for K in (10, 32):
+        clients = iid_client_split(ds, K)
+        xs, ys = next(client_batch_stream(clients, 64, 2, seed=0))
+        batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+        for name in codec_names(include_aliases=False):
+            codec = get_codec(name)
+            cfg = FederatedConfig(num_clients=K, local_steps=2,
+                                  local_lr=0.5, aggregate="psum_u32",
+                                  downlink=name)
+            st = encode_state(zspecs, cfg, state0)
+            f = jax.jit(lambda s, b, k, cfg=cfg: federated_round(
+                zspecs, s, mlp_loss, b, k, cfg))
+            st1, met = f(st, batch, jax.random.PRNGKey(0))
+            jax.block_until_ready(st1)
+            assert np.isfinite(float(met["loss"])), name
+            iters = 10 if full else 3
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(f(st, batch, jax.random.PRNGKey(0)))
+            us = (time.perf_counter() - t0) / iters * 1e6
+            down = score_downlink_bytes(codec, n)
+            rows.append({
+                "bench": "downlink_codec", "codec": name,
+                "strategy": name, "K": K, "n": n, "us": us,
+                "downlink_bytes_per_client": down,
+                "downlink_vs_f32": down / f32_down,
+            })
+            _emit(f"downlink_codec_{name}_K{K}", us,
+                  f"down={down}B;vs_f32={down / f32_down:.4f}")
+    return rows
+
+
 def _ab_median(f_a, f_b, iters):
     """Median us of each side, alternating runs (load drift cancels)."""
     import jax
@@ -636,6 +731,22 @@ def bench_wire_formats(full=False):
     return rows
 
 
+def bench_downlink_tradeoff(full=False):
+    """Accuracy vs downlink bytes per codec — the paper's trade-off
+    knob as a table (experiments.run_downlink_tradeoff)."""
+    from repro.experiments import run_downlink_tradeoff
+
+    t0 = time.perf_counter()
+    rows = run_downlink_tradeoff(quick=not full)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    for r in rows:
+        _emit("downlink_tradeoff", us,
+              f"{r['codec']};acc={r['final_sampled_acc']:.3f}"
+              f";down={r['downlink_bytes_per_client']:.0f}B"
+              f";vs_f32={r['downlink_vs_f32']:.4f}")
+    return rows
+
+
 BENCHES = {
     "kernel": lambda full: bench_kernel_reconstruct(),
     "fedround": bench_federated_round,
@@ -643,7 +754,9 @@ BENCHES = {
     "bwd": bench_bwd,
     "threshold": bench_threshold,
     "wire": bench_wire,
+    "downlink": bench_downlink,
     "wire_formats": bench_wire_formats,
+    "downlink_tradeoff": bench_downlink_tradeoff,
     "table1": bench_table1,
     "table2": bench_table2,
     "fig4": bench_fig4,
@@ -667,7 +780,7 @@ def main() -> None:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
             if name in ("kernel", "fedround", "fused", "bwd", "threshold",
-                        "wire"):
+                        "wire", "downlink"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

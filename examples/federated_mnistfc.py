@@ -5,7 +5,11 @@ upload n BITS (the sampled masks) instead of 32m float bits — a 256x
 reduction — and the server averages masks into the new probability
 vector.  ``--aggregate`` picks the wire transport (mean_f32 baseline,
 psum_u32 popcount psum, allgather_packed raw lanes; all bit-exact
-against each other — only the measured bytes differ).
+against each other — only the measured bytes differ).  ``--downlink``
+picks the server broadcast codec (f32 oracle, u16/u8 quantized
+probability words — 2x/4x less downlink; the carried state between
+rounds IS the encoded wire representation, and eval samples networks
+straight from it).
 
 Rounds run through the ``federated_fit`` scan driver: the loop below
 compiles ONE (block, K, E)-shaped program and re-dispatches it per
@@ -21,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm.metering import round_wire_report, wire_table
+from repro.comm.metering import downlink_table, round_wire_report, wire_table
 from repro.core import (
-    FederatedConfig, ZamplingConfig, build_specs, init_state,
+    FederatedConfig, ZamplingConfig, build_specs, encode_state, init_state,
 )
 from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
 from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_accuracy, mlp_loss
@@ -36,6 +40,8 @@ ap.add_argument("--local-steps", type=int, default=30)
 ap.add_argument("--compression", type=float, default=8.0)
 ap.add_argument("--aggregate", default="psum_u32",
                 help="wire transport: mean_f32 | psum_u32 | allgather_packed")
+ap.add_argument("--downlink", default="u8",
+                help="server broadcast codec: f32 | u16 | u8")
 ap.add_argument("--block", type=int, default=5,
                 help="rounds per compiled scan block (and eval period)")
 args = ap.parse_args()
@@ -46,20 +52,30 @@ zspecs = build_specs(template, ZamplingConfig(
     compression=args.compression, d=10, window=128, min_size=128))
 state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
 
-rep = round_wire_report(zspecs, args.aggregate, args.clients)
+rep = round_wire_report(zspecs, args.aggregate, args.clients,
+                        downlink=args.downlink)
 print(f"m={zspecs.m_total} n={zspecs.n_total}; transport={rep['transport']}: "
       f"client upload {rep['uplink_bytes_per_client']/1024:.1f} KiB/round vs "
       f"naive f32 {rep['naive_uplink_bytes_per_client']/1024:.1f} KiB "
       f"({rep['naive_uplink_bytes_per_client']/rep['uplink_bytes_per_client']:.0f}x less)")
-for row in wire_table(zspecs, args.clients):
+for row in wire_table(zspecs, args.clients, downlink=args.downlink):
     print(f"  {row['strategy']:>17}: {row['uplink_bytes_per_client']/1024:8.1f}"
           f" KiB/client/round ({row['uplink_vs_f32']:.4f}x of f32)")
+print(f"downlink codec={rep['downlink']}: server broadcast "
+      f"{rep['downlink_bytes_per_client']/1024:.1f} KiB/client/round "
+      f"({rep['downlink_vs_f32']:.4f}x of f32)")
+for row in downlink_table(zspecs, args.clients, aggregate=args.aggregate):
+    print(f"  {row['codec']:>17}: {row['downlink_bytes_per_client']/1024:8.1f}"
+          f" KiB/client/round ({row['downlink_vs_f32']:.4f}x of f32)")
 
 clients = iid_client_split(ds, args.clients)
 stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
 fcfg = FederatedConfig(num_clients=args.clients,
                        local_steps=args.local_steps, local_lr=0.5,
-                       aggregate=args.aggregate)
+                       aggregate=args.aggregate, downlink=args.downlink)
+# the round carry is the ENCODED broadcast: quantized codecs carry
+# uint8/uint16 wire words between rounds, never an f32 score slab
+state = encode_state(zspecs, fcfg, state)
 acc = jax.jit(lambda p: mlp_accuracy(
     p, {"x": jnp.asarray(ds.x_test), "y": jnp.asarray(ds.y_test)}))
 
@@ -90,4 +106,5 @@ while done < args.rounds:
     print(f"round {done:3d}: loss={losses[-1]:.3f} "
           f"(block mean {losses.mean():.3f}) "
           f"sampled-acc={ms:.3f}+-{std:.3f}")
-print("done — every upload in that run was a binary mask, never a float.")
+print("done — every upload was a binary mask and every broadcast was "
+      f"{args.downlink} wire words, never a naive float tensor.")

@@ -83,10 +83,39 @@ if not {"fused", "lax_map"} <= strat:
              f"strategies {sorted(strat)} (need fused and lax_map). "
              f"Run `python -m benchmarks.run --only threshold` and commit.")
 print(f"  ok: {len(thr)} threshold rows, strategies {sorted(strat)}")
+
+# downlink codec rows: every registered codec must be present with the
+# metered byte accounting, and u8's mask-only downlink bytes must be
+# <= 1/4 of the f32 broadcast — the codec subsystem's headline saving
+# must not silently regress.
+DOWN_KEYS = {"us", "downlink_bytes_per_client", "downlink_vs_f32", "K", "n"}
+down = [r for r in rows if r.get("bench") == "downlink_codec"]
+codecs = {r.get("codec") for r in down}
+bad = [r for r in down if not DOWN_KEYS <= set(r)]
+if not {"f32", "u16", "u8"} <= codecs or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: downlink codecs "
+             f"{sorted(codecs)} (need f32, u16, u8); rows missing keys: "
+             f"{bad}. Run `python -m benchmarks.run --only downlink` and "
+             f"commit.")
+by_key = {(r["codec"], r["K"]): r for r in down}
+unpaired = [r for r in down if r["codec"] == "u8"
+            and ("f32", r["K"]) not in by_key]
+if unpaired:
+    sys.exit(f"BENCH_reconstruct.json is stale: u8 downlink rows with no "
+             f"f32 row at the same K: {unpaired}. Run `python -m "
+             f"benchmarks.run --only downlink` and commit.")
+fat = [r for r in down
+       if r["codec"] == "u8"
+       and r["downlink_bytes_per_client"]
+       > by_key[("f32", r["K"])]["downlink_bytes_per_client"] / 4]
+if fat:
+    sys.exit(f"u8 downlink bytes exceed 1/4 of f32: {fat}")
+print(f"  ok: {len(down)} downlink rows, codecs {sorted(codecs)}, "
+      f"u8 <= 1/4 f32")
 EOF
 
-echo "== reconstruction + fused + bwd + wire benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire
+echo "== reconstruction + fused + bwd + wire + downlink benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -112,4 +141,9 @@ for r in rows:
               f"vs scatter {r['scatter_bwd_us']/1e3:8.1f}ms "
               f"({r['bwd_speedup']:.2f}x); bwd:fwd "
               f"{r['bwd_fwd_ratio_plan']:.2f}")
+    elif r.get("bench") == "downlink_codec":
+        print(f"  down {r['codec']:>17} K={r['K']:>3}: "
+              f"{r['us']/1e3:8.1f}ms  "
+              f"down={r['downlink_bytes_per_client']:>10}B "
+              f"({r['downlink_vs_f32']:.4f}x f32)")
 EOF

@@ -1,0 +1,206 @@
+"""Downlink codec — the wire format of the server's p(t) broadcast.
+
+The uplink has been bits-on-the-wire since the transport layer
+(``comm.protocol``), but the server's score broadcast was still a full
+f32 vector: 32n bits, the dominant term of the round's traffic.  This
+module makes the downlink representation a first-class, registered
+strategy — the protocol-level counterpart of ``Transport`` — and the
+ENCODED scores ARE the federated round's carried state
+(``core.federated`` threads them through the round/scan drivers).
+
+Why quantizing in probability space is nearly free here: a client never
+uses the broadcast score s except through the Bernoulli compare
+``z = 1[uniform(hash) <= f(s)]`` (and as the init of its local SGD), so
+it only needs the probability at the precision of that compare.  The
+codec therefore transmits ``q = dithered_round(f(s) * (2^b - 1))`` in b
+bits per coordinate and DEFINES the decoded probability as the exactly
+achievable threshold value:
+
+    T(q)   = floor(q * 2^24 / (2^b - 1))     (``quant_threshold_u24``)
+    p_hat  = T(q) * 2^-24                     (exact in f32)
+
+so the client-side draw is a pure integer compare of the 24-bit draw
+word against the widened threshold — ``(hash >> 8) < T(q)`` — with
+P(z=1 | q) EXACTLY p_hat at the draw-word level (no double rounding
+through a float compare), and bit-identical to ``bernoulli_u32`` on
+p_hat.  No dequantized f32 score slab exists on the draw path
+(``core.sampling.sample_mask_qhash``; in-kernel:
+``kernels.ops.sample_reconstruct(..., qbits=b)``).
+
+Encode dither: ``q = floor(p*S + 1/4 + dither/2)`` with ``dither in
+[0, 1)`` from the counter-hash stream (``core.sampling
+.QUANT_DITHER_CTR``, words ``(spec.seed, spec.tensor_id, CTR, word,
+coord)``).  Deterministic-but-pseudorandom: every shard re-encoding the
+replicated aggregate regenerates the identical dither from the shared
+round word, so server and clients agree WITHOUT extra bits, while the
+rounding error decorrelates across coordinates and rounds.  The
+half-amplitude dither keeps the worst-case step error at 3/4 of a
+quantization step, so the encode→decode round trip is within
+``2^-b`` of the input (pinned in tests/test_downlink.py).
+
+Registered codecs: ``f32`` (identity — the bit-exact oracle; a
+``downlink='f32'`` round is bit-identical to the pre-codec protocol),
+``u16`` and ``u8`` (16/8 bits per coordinate, 2x/4x downlink
+reduction).  ``comm.metering`` meters whichever codec the round
+configures, exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# NOTE: no top-level ``repro.core`` import — ``core.federated`` imports
+# this package eagerly (registry validation at config construction), so
+# the draw/dither primitives are imported lazily inside the methods.
+
+_INV_2_24 = np.float32(1.0 / (1 << 24))
+
+
+class DownlinkCodec:
+    """One downlink wire format. Subclasses define the four hooks.
+
+    ``encode`` runs wherever the aggregate lives (the vmap server, or
+    every shard of the shard_map path on the replicated aggregate);
+    ``decode`` runs on the client to seed its trainable score copy.
+    The mask-draw path does NOT decode: quantized codecs draw through
+    the widened-threshold integer compare (``threshold_u24``).
+    """
+
+    name: str = "?"
+    bits: int = 32  # wire bits per coordinate
+    wire_dtype = jnp.float32
+    quantized: bool = False  # True: wire words are b-bit uints
+
+    def downlink_bits_per_client(self, n: int) -> int:
+        """Exact bits the server puts on the wire per client for an
+        n-coordinate score broadcast."""
+        return self.bits * n
+
+    def encode(self, spec, scores, word):
+        """f32 scores -> wire representation (``word``: the shared
+        round word keying the dither stream; unused by ``f32``)."""
+        raise NotImplementedError
+
+    def decode(self, spec, wire):
+        """Wire representation -> f32 probabilities."""
+        raise NotImplementedError
+
+    def threshold_u24(self, wire):
+        """Wire words -> widened uint32 draw thresholds in [0, 2^24]."""
+        raise NotImplementedError(
+            f"codec {self.name!r} has no quantized threshold"
+        )
+
+
+class F32Down(DownlinkCodec):
+    """Identity: the full f32 score vector, today's broadcast.  The
+    bit-exact oracle — encode and decode pass arrays through untouched,
+    so a ``downlink='f32'`` round is bit-identical to the pre-codec
+    protocol on every execution path."""
+
+    name = "f32"
+    bits = 32
+    quantized = False
+
+    def encode(self, spec, scores, word):
+        del spec, word
+        return scores
+
+    def decode(self, spec, wire):
+        del spec
+        return wire
+
+
+class QuantizedDown(DownlinkCodec):
+    """b-bit probability words with shared-stream dithered rounding."""
+
+    quantized = True
+
+    def __init__(self, name: str, bits: int, wire_dtype):
+        self.name = name
+        self.bits = bits
+        self.wire_dtype = wire_dtype
+        self._scale = np.float32((1 << bits) - 1)
+
+    def _dither(self, spec, word, n: int):
+        """Shared dither in [0, 1): regenerated identically by every
+        party from (spec.seed, spec.tensor_id, word, coord)."""
+        from ..core.hashrng import hash_u32
+        from ..core.sampling import QUANT_DITHER_CTR
+
+        coords = jnp.arange(n, dtype=jnp.uint32)
+        u = hash_u32(spec.seed, spec.tensor_id, QUANT_DITHER_CTR,
+                     jnp.asarray(word, jnp.uint32), coords)
+        return (u >> np.uint32(8)).astype(jnp.float32) * _INV_2_24
+
+    def encode(self, spec, scores, word):
+        from ..core.sampling import clip_probs
+
+        p = clip_probs(jnp.asarray(scores, jnp.float32))
+        d = self._dither(spec, word, p.shape[-1])
+        q = jnp.floor(p * self._scale + np.float32(0.25)
+                      + np.float32(0.5) * d)
+        return jnp.clip(q, 0.0, self._scale).astype(self.wire_dtype)
+
+    def decode(self, spec, wire):
+        del spec
+        return self.threshold_u24(wire).astype(jnp.float32) * _INV_2_24
+
+    def threshold_u24(self, wire):
+        from ..core.sampling import quant_threshold_u24
+
+        return quant_threshold_u24(wire, self.bits)
+
+
+_REGISTRY: Dict[str, DownlinkCodec] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_codec(codec: DownlinkCodec,
+                   aliases: Tuple[str, ...] = ()) -> DownlinkCodec:
+    """Add a downlink codec (and optional aliases) to the registry."""
+    _REGISTRY[codec.name] = codec
+    for a in aliases:
+        _ALIASES[a] = codec.name
+    return codec
+
+
+def codec_names(include_aliases: bool = True) -> List[str]:
+    names = sorted(_REGISTRY)
+    if include_aliases:
+        names += sorted(_ALIASES)
+    return names
+
+
+def get_codec(name: str) -> DownlinkCodec:
+    canonical = _ALIASES.get(name, name)
+    if canonical not in _REGISTRY:
+        raise ValueError(
+            f"unknown downlink codec {name!r}; registered: "
+            f"{', '.join(codec_names())}"
+        )
+    return _REGISTRY[canonical]
+
+
+def codec_for_dtype(dtype) -> DownlinkCodec:
+    """The quantized codec whose wire dtype matches, or ``f32`` for
+    floating score leaves — how ``core.zampling.sample_weights`` infers
+    the broadcast representation from an encoded state."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return get_codec("f32")
+    for codec in _REGISTRY.values():
+        if codec.quantized and jnp.dtype(codec.wire_dtype) == dtype:
+            return codec
+    raise ValueError(
+        f"no downlink codec carries dtype {dtype}; registered: "
+        f"{', '.join(codec_names())}"
+    )
+
+
+register_codec(F32Down())
+register_codec(QuantizedDown("u16", 16, jnp.uint16))
+register_codec(QuantizedDown("u8", 8, jnp.uint8))

@@ -1,32 +1,42 @@
 """Exact wire accounting: bytes on the network per federated round.
 
 Analytic, not sampled — the byte counts are a pure function of the
-spec set and the transport, and they meter the PROTOCOL: what one
-client uploads to the aggregator (uint32 lane padding included, unlike
-the idealized ``n bits`` of the paper's Table 1).  One caveat for
+spec set, the uplink transport, and the downlink codec, and they meter
+the PROTOCOL in BOTH directions: what one client uploads to the
+aggregator (uint32 lane padding included, unlike the idealized
+``n bits`` of the paper's Table 1) AND what the server broadcasts back
+(the configured ``comm.downlink`` codec's b bits per coordinate — no
+longer a hardcoded ``4 * n_total`` f32 assumption).  One caveat for
 ``psum_u32``: XLA has no sub-word all-reduce, so in the shard_map
 SIMULATION its psum operand is the unpacked uint32 vector — the
 metered packed bytes describe the client upload a bandwidth-optimal
 reduction would move, not that simulated operand's width.
 ``allgather_packed`` moves exactly the metered lanes end to end, in
-simulation too.
+simulation too.  Symmetrically, the quantized downlink codecs carry
+their wire words as uint8/uint16 arrays in simulation, so there the
+carried state IS the metered wire.
 
 Per round, per client:
 
   uplink    = sum over reparametrized tensors of the transport's mask
               wire bytes  +  f32 bytes for the dense leaves (norms /
               biases are trained locally and averaged too);
-  downlink  = f32 score vector (the server's p(t) broadcast)  +  the
-              same dense leaves.
+  downlink  = sum over reparametrized tensors of the codec's score
+              wire bytes (b bits/coordinate)  +  the same dense leaves.
 
 ``round_wire_report`` feeds the round metrics in ``core.federated``;
-``wire_table`` feeds the experiment tables and ``benchmarks/run.py``.
+``wire_table`` / ``downlink_table`` feed the experiment tables and
+``benchmarks/run.py``.  The analytic cross-check lives in
+``ZamplingSpecs.comm_bits_per_round``: its ``client_up_wire`` /
+``server_down_wire`` keys equal 8x this module's metered bytes
+(pinned in tests/test_fused.py and tests/test_downlink.py).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
+from .downlink import DownlinkCodec, codec_names, get_codec
 from .protocol import Transport, get_transport, resolve_transport, transport_names
 
 _F32_BYTES = 4
@@ -37,9 +47,17 @@ def mask_uplink_bytes(transport: Transport, n: int) -> int:
     return -(-transport.uplink_bits_per_client(n) // 8)
 
 
+def score_downlink_bytes(codec: DownlinkCodec, n: int) -> int:
+    """Exact wire bytes of the server's n-coordinate score broadcast
+    to one client under ``codec`` (the downlink mirror of
+    ``mask_uplink_bytes``)."""
+    return -(-codec.downlink_bits_per_client(n) // 8)
+
+
 def round_wire_report(zspecs, aggregate: str, num_clients: int,
-                      mode: str = "sample") -> Dict[str, float]:
-    """Exact per-round byte counts for one strategy.
+                      mode: str = "sample",
+                      downlink: str = "f32") -> Dict[str, float]:
+    """Exact per-round byte counts for one (transport, codec) pair.
 
     ``zspecs``: anything with ``.specs`` ({path: spec with .n}),
     ``.n_total``, ``.m_total`` and ``.dense_total`` (ZamplingSpecs).
@@ -50,28 +68,37 @@ def round_wire_report(zspecs, aggregate: str, num_clients: int,
     output with a tolerance at that scale.
     """
     t = resolve_transport(aggregate, mode)
+    codec = get_codec(downlink)
     mask_up = sum(mask_uplink_bytes(t, s.n) for s in zspecs.specs.values())
     dense = _F32_BYTES * zspecs.dense_total
     up_client = mask_up + dense
-    down_client = _F32_BYTES * zspecs.n_total + dense
+    down_mask = sum(score_downlink_bytes(codec, s.n)
+                    for s in zspecs.specs.values())
+    down_client = down_mask + dense
+    down_f32 = _F32_BYTES * zspecs.n_total + dense
     return {
         "transport": t.name,
+        "downlink": codec.name,
         "uplink_bytes_per_client": float(up_client),
         "uplink_bytes_round": float(up_client * num_clients),
         "downlink_bytes_per_client": float(down_client),
+        "downlink_bytes_round": float(down_client * num_clients),
+        "downlink_vs_f32": float(down_client) / float(down_f32),
         "naive_uplink_bytes_per_client": float(
             _F32_BYTES * zspecs.m_total + dense
         ),
     }
 
 
-def wire_table(zspecs, num_clients: int) -> List[Dict]:
-    """One row per registered strategy — the measured-bytes table for
-    ``experiments.paper`` and the wire benchmark."""
+def wire_table(zspecs, num_clients: int, downlink: str = "f32") -> List[Dict]:
+    """One row per registered uplink strategy (at the given downlink
+    codec) — the measured-bytes table for ``experiments.paper`` and the
+    wire benchmark."""
     baseline = round_wire_report(zspecs, "mean_f32", num_clients)
     rows = []
     for name in transport_names(include_aliases=False):
-        rep = round_wire_report(zspecs, name, num_clients)
+        rep = round_wire_report(zspecs, name, num_clients,
+                                downlink=downlink)
         rows.append({
             "bench": "wire_format",
             "strategy": name,
@@ -87,6 +114,26 @@ def wire_table(zspecs, num_clients: int) -> List[Dict]:
     return rows
 
 
+def downlink_table(zspecs, num_clients: int,
+                   aggregate: str = "psum_u32") -> List[Dict]:
+    """One row per registered downlink codec (at the given uplink
+    transport) — the downlink mirror of ``wire_table``."""
+    rows = []
+    for name in codec_names(include_aliases=False):
+        rep = round_wire_report(zspecs, aggregate, num_clients,
+                                downlink=name)
+        rows.append({
+            "bench": "downlink_format",
+            "codec": name,
+            "K": num_clients,
+            "n_total": zspecs.n_total,
+            "m_total": zspecs.m_total,
+            **rep,
+        })
+    return rows
+
+
 __all__ = [
-    "mask_uplink_bytes", "round_wire_report", "wire_table", "get_transport",
+    "mask_uplink_bytes", "score_downlink_bytes", "round_wire_report",
+    "wire_table", "downlink_table", "get_transport", "get_codec",
 ]

@@ -2,6 +2,8 @@
 
 from .federated import (
     FederatedConfig,
+    decode_state,
+    encode_state,
     federated_round,
     local_update,
     mask_program,
@@ -27,8 +29,10 @@ from .sampling import (
     init_scores,
     key_word,
     mask_u32,
+    quant_threshold_u24,
     sample_mask,
     sample_mask_hash,
+    sample_mask_qhash,
     sample_mask_st,
     sample_mask_st_hash,
 )
@@ -38,6 +42,7 @@ from .zampling import (
     ZamplingConfig,
     ZamplingSpecs,
     build_specs,
+    infer_downlink,
     init_state,
     sample_masks,
     sample_weights,
@@ -47,15 +52,18 @@ from .zampling import (
 )
 
 __all__ = [
-    "FederatedConfig", "federated_round", "local_update", "mask_program",
+    "FederatedConfig", "decode_state", "encode_state", "federated_round",
+    "local_update", "mask_program",
     "sharded_client_update", "QSpec", "make_qspec", "row_indices",
     "row_values", "materialize_q", "reconstruct_ref", "TransposePlan",
     "build_block_plan", "build_transpose_plan", "default_bwd_path",
     "resolve_bwd_path", "row_plan", "set_default_bwd_path", "as_word",
     "clip_probs", "discretize_mask", "expected_mask", "fold_word",
-    "init_scores", "key_word", "mask_u32", "sample_mask",
-    "sample_mask_hash", "sample_mask_st", "sample_mask_st_hash",
+    "init_scores", "key_word", "mask_u32", "quant_threshold_u24",
+    "sample_mask", "sample_mask_hash", "sample_mask_qhash",
+    "sample_mask_st", "sample_mask_st_hash",
     "MASK_MODES", "MaskProgram", "ZamplingConfig", "ZamplingSpecs",
-    "build_specs", "init_state", "sample_masks", "sample_weights",
+    "build_specs", "infer_downlink", "init_state", "sample_masks",
+    "sample_weights",
     "state_spec", "validate_mask_mode", "weights_from_masks",
 ]

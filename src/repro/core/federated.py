@@ -25,8 +25,8 @@ equality, forward and gradient (tests/test_fused.py).  All mode
 dispatch lives in ONE place, ``core.zampling.MaskProgram`` (mode x
 fused x packed-ness).
 
-Step 3/4 — what actually crosses the network — is delegated to the
-wire-format transport layer (``repro.comm``): ``FederatedConfig
+Step 3/4 — what actually crosses the network upstream — is delegated
+to the wire-format transport layer (``repro.comm``): ``FederatedConfig
 .aggregate`` names a registered ``comm.protocol.Transport`` strategy
 (``mean_f32`` f32 baseline, ``psum_u32`` integer popcount psum of
 bitpacked lanes, ``allgather_packed`` raw-lane all-gather; ``mean`` is
@@ -37,6 +37,25 @@ bit-exact against each other; they differ only in wire bytes, which
 ``comm.metering`` reports exactly in every round's metrics
 (``uplink_bytes_per_client`` etc.).  Continuous-mode rounds upload
 probabilities, not bits, and always use ``mean_f32``.
+
+Step 1 — the DOWNLINK — is symmetric since the codec subsystem
+(``comm.downlink``): ``FederatedConfig.downlink`` names a registered
+``DownlinkCodec`` and the ENCODED scores ARE the round's carried
+state.  ``federated_round`` / ``sharded_client_update`` take
+``state['scores']`` in the codec's wire representation, the client
+decodes only its own trainable copy (``MaskProgram.decode_scores``),
+and after aggregation the server re-encodes ``p(t+1)`` with the
+shared dither word ``fold_word(key_word(key), round_index)`` — every
+shard regenerates the identical dither from the replicated key, so
+the encoded broadcast is bit-identical across the vmap and shard_map
+paths with zero extra bits.  ``downlink='f32'`` (default) is the
+identity oracle: those rounds are bit-identical to the pre-codec
+protocol.  Quantized codecs (``u16``/``u8``) cut the dominant
+``server_down_wire`` term 2x/4x; mask draws made straight from the
+broadcast (eval/serving, ``MaskProgram.*_from_wire``) use the
+widened-threshold integer compare and never materialize a dequantized
+f32 score slab.  ``encode_state`` converts an f32 init state into the
+configured wire representation before the first round.
 
 Two execution paths with identical math AND identical draws (the
 per-client draw words coincide, so the two paths produce bit-identical
@@ -66,11 +85,17 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from ..comm.downlink import codec_names, get_codec
 from ..comm.metering import round_wire_report
 from ..comm.protocol import resolve_transport, transport_names
 from ..optim import Optimizer, sgd
 from .sampling import as_word, fold_word
-from .zampling import MaskProgram, ZamplingSpecs, validate_mask_mode
+from .zampling import (
+    MaskProgram,
+    ZamplingSpecs,
+    infer_downlink,
+    validate_mask_mode,
+)
 
 LossFn = Callable[[Any, Any], jnp.ndarray]  # (params, batch) -> scalar
 
@@ -85,12 +110,18 @@ class FederatedConfig:
     mode: str = "sample"  # sample | continuous | discretize
     aggregate: str = "mean"  # a registered comm.protocol transport name
     mask_path: str = "fused"  # fused | composed (the bit-exact oracle)
+    downlink: str = "f32"  # a registered comm.downlink codec name
 
     def __post_init__(self):
         if self.aggregate not in transport_names():
             raise ValueError(
                 f"unknown aggregate strategy {self.aggregate!r}; "
                 f"registered transports: {', '.join(transport_names())}"
+            )
+        if self.downlink not in codec_names():
+            raise ValueError(
+                f"unknown downlink codec {self.downlink!r}; "
+                f"registered codecs: {', '.join(codec_names())}"
             )
         validate_mask_mode(self.mode)
         if self.mask_path not in _MASK_PATHS:
@@ -117,7 +148,45 @@ def mask_program(zspecs: ZamplingSpecs, cfg: FederatedConfig) -> MaskProgram:
         mode=cfg.mode,
         fused=cfg.mask_path == "fused",
         packed=transport.packed_wire,
+        downlink=cfg.downlink,
     )
+
+
+def encode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state,
+                 word=0):
+    """Encode an f32 score state into ``cfg.downlink``'s wire
+    representation — what the round drivers carry.  ``word`` keys the
+    dither stream (use the same derivation as the round that WOULD
+    have produced this broadcast; 0 for an init state).  Identity for
+    ``downlink='f32'``.  Idempotent: a state already carrying
+    ``cfg.downlink``'s wire words passes through unchanged (encoding
+    wire words as if they were f32 scores would saturate them all to
+    the top code); a state encoded with a DIFFERENT codec raises."""
+    codec = get_codec(cfg.downlink)
+    carried = infer_downlink(state["scores"])
+    if carried == codec.name:
+        return state
+    if carried != "f32":
+        raise ValueError(
+            f"state is already encoded with downlink codec {carried!r}; "
+            f"decode_state it first before re-encoding as "
+            f"{codec.name!r}"
+        )
+    if not codec.quantized:
+        return state
+    w = as_word(word)
+    scores = {
+        path: codec.encode(spec, state["scores"][path], w)
+        for path, spec in zspecs.specs.items()
+    }
+    return {**state, "scores": scores}
+
+
+def decode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state):
+    """Wire-encoded round carry -> f32 score state (server-side
+    analysis helper; the lossy inverse of ``encode_state``)."""
+    program = mask_program(zspecs, cfg)
+    return {**state, "scores": program.decode_scores(state["scores"])}
 
 
 def local_update(
@@ -143,11 +212,16 @@ def local_update(
     and the upload at ``fold_word(kw, E)``, where ``kw = as_word(key)``
     — the integer step counter is the scanned xs, so the in-kernel
     draw of the fused path and this oracle generate identical bits.
+
+    ``state['scores']`` arrives in ``cfg.downlink``'s wire
+    representation (the encoded broadcast); the client decodes its own
+    TRAINABLE copy here — identity for the ``f32`` oracle codec, the
+    exact widened-threshold probabilities for the quantized codecs.
     """
     opt = opt or sgd(cfg.local_lr)
     program = mask_program(zspecs, cfg)
     kw = as_word(key)
-    scores0 = dict(state["scores"])
+    scores0 = program.decode_scores(state["scores"])
     dense0 = dict(state["dense"])
 
     def loss_of(trainable, batch, step_word):
@@ -188,6 +262,7 @@ WIRE_METRIC_KEYS = (
     "uplink_bytes_per_client",
     "uplink_bytes_round",
     "downlink_bytes_per_client",
+    "downlink_bytes_round",
     "naive_uplink_bytes_per_client",
 )
 
@@ -202,9 +277,29 @@ def _wire_metrics(zspecs: ZamplingSpecs, cfg: FederatedConfig,
     rep = round_wire_report(
         zspecs, cfg.aggregate,
         cfg.num_clients if num_clients is None else num_clients,
-        mode=cfg.mode,
+        mode=cfg.mode, downlink=cfg.downlink,
     )
     return {k: rep[k] for k in WIRE_METRIC_KEYS}
+
+
+def _encode_scores(zspecs: ZamplingSpecs, cfg: FederatedConfig,
+                   scores, key, round_index):
+    """Re-encode the aggregated p(t+1) as the next round's broadcast.
+
+    The dither word ``fold_word(key_word(key), round_index)`` is
+    derived from REPLICATED values only, so the vmap server and every
+    shard_map shard produce bit-identical encodings (the dither stream
+    has its own counter space — it can never alias a client draw
+    word).  Identity for ``downlink='f32'``.
+    """
+    codec = get_codec(cfg.downlink)
+    if not codec.quantized:
+        return scores
+    w = fold_word(as_word(key), jnp.asarray(round_index).astype(jnp.uint32))
+    return {
+        path: codec.encode(spec, scores[path], w)
+        for path, spec in zspecs.specs.items()
+    }
 
 
 def _aggregate_stacked(zspecs, transport, packed, z_all):
@@ -246,8 +341,12 @@ def federated_round(
         return local_update(zspecs, state, loss_fn, batches, w, cfg, opt)
 
     z_all, dense_all, losses = jax.vmap(one)(client_batches, words)
-    # server aggregation: p(t+1) = mean_k z^(k), via the wire transport
-    new_scores = _aggregate_stacked(zspecs, transport, packed, z_all)
+    # server aggregation: p(t+1) = mean_k z^(k), via the wire transport,
+    # re-encoded as the next broadcast (cfg.downlink's wire words)
+    new_scores = _encode_scores(
+        zspecs, cfg, _aggregate_stacked(zspecs, transport, packed, z_all),
+        key, round_index,
+    )
     new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
     new_state = {"scores": new_scores, "dense": new_dense}
     metrics = {"loss": jnp.mean(losses), **_wire_metrics(zspecs, cfg)}
@@ -308,6 +407,10 @@ def sharded_client_update(
             p: transport.aggregate_collective(z, axis_names)
             for p, z in z_new.items()
         }
+    # re-encode the replicated aggregate as the next broadcast: the
+    # dither word comes from the replicated (key, round_index), so all
+    # shards produce the identical encoding — bit-equal to the vmap path
+    new_scores = _encode_scores(zspecs, cfg, new_scores, key, round_index)
     # dense leaves stay on the f32 psum path: XLA:CPU's
     # AllReducePromotion pass aborts on bf16 all-reduces (and f32 is
     # the numerically right accumulator anyway)

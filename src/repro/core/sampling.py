@@ -16,7 +16,11 @@ tensor ``tensor_id`` at draw counter ``step`` is
 so the pure-jnp oracle and the Pallas kernels regenerate *identical*
 bits from ``(seed, tensor_id, step)`` alone — a window block only needs
 its coordinate range and the traced ``step`` word, never a (n,) mask
-operand.  ``step`` is a single uint32 draw counter; callers build it
+operand.  When the server broadcast is quantized (``comm.downlink``),
+the SAME draw word decides the bit by an integer compare against the
+widened threshold (``sample_mask_qhash``) — bit-identical to
+``bernoulli_u32`` on the codec's decoded probability, with no f32
+score slab on the client draw path.  ``step`` is a single uint32 draw counter; callers build it
 from their PRNG key (``key_word``) plus round/client/local-step
 counters threaded through their scans (``core.federated.local_update``,
 ``train.fit``).  ``MASK_CTR`` keeps the mask stream disjoint from the
@@ -27,6 +31,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hashrng import bernoulli_u32, hash_u32
 
@@ -34,6 +39,19 @@ from .hashrng import bernoulli_u32, hash_u32
 # (seed, tensor_id, MASK_CTR, step, coord) — a 5-word combine, disjoint
 # from qspec's 4-word (seed, tensor_id, row, ctr) Q streams.
 MASK_CTR = 0x0008_0000
+
+# Counter space of the downlink-quantization dither stream
+# (comm.downlink): words are (seed, tensor_id, QUANT_DITHER_CTR, word,
+# coord), disjoint from MASK_CTR so the server's encode dither can
+# never alias a mask draw.  Dither/determinism contract: the dither is
+# PSEUDORANDOM BUT SHARED — every party (the vmap server, each shard_map
+# shard re-encoding the replicated aggregate, the test oracle)
+# regenerates the identical dither from (spec.seed, tensor_id, round
+# word, coord), so the encoded broadcast is bit-identical everywhere
+# with ZERO extra wire bits, while the rounding error still decorrelates
+# across coordinates and rounds (no systematic drift of the mean, which
+# deterministic round-to-nearest would reintroduce).
+QUANT_DITHER_CTR = 0x0010_0000
 
 
 def clip_probs(s):
@@ -97,6 +115,44 @@ def sample_mask_st_hash(p, seed, tensor_id, step):
     """Straight-through hash Bernoulli: forward z, backward identity."""
     z = sample_mask_hash(p, seed, tensor_id, step)
     return p + jax.lax.stop_gradient(z - p)
+
+
+def quant_threshold_u24(q, bits: int):
+    """Widen a b-bit probability word to the 24-bit draw threshold.
+
+    ``T(q) = floor(q * 2^24 / (2^bits - 1))``, exact in uint32
+    arithmetic via ``a + a // S`` with ``a = q << (24 - bits)`` and
+    ``S = 2^bits - 1`` (since ``a * 2^bits / S = a + a/S``) — no 64-bit
+    intermediate, so the same expression runs inside Pallas kernel
+    blocks.  ``T(0) = 0`` and ``T(S) = 2^24``, so the endpoints stay
+    exact (never/always fire).  The decoded probability ``T * 2^-24``
+    is exactly representable in f32, which is what makes the integer
+    compare below bit-identical to ``bernoulli_u32`` on the decoded
+    value: ``u32_to_uniform(u) <= T*2^-24  <=>  (u >> 8) < T``.
+    """
+    if not 1 <= bits <= 24:
+        raise ValueError(f"quantized probability words need 1..24 bits, "
+                         f"got {bits}")
+    a = jnp.asarray(q).astype(jnp.uint32) << np.uint32(24 - bits)
+    return a + a // np.uint32((1 << bits) - 1)
+
+
+def sample_mask_qhash(q, bits: int, seed, tensor_id, step):
+    """z ~ Bern(T(q)/2^24) drawn straight from QUANTIZED probability
+    words — the integer compare of the draw word against the widened
+    threshold.  No dequantized f32 probability array exists: ``q`` is
+    the b-bit wire word per coordinate (any uint dtype), and the draw
+    is ``(hash_word >> 8) < quant_threshold_u24(q)``.  Bit-identical to
+    ``sample_mask_hash(decode(q), ...)`` where ``decode(q) =
+    quant_threshold_u24(q, bits) * 2^-24`` (see ``comm.downlink``).
+    Not differentiable; shapes/broadcasting as ``sample_mask_hash``.
+    """
+    n = jnp.shape(q)[-1]
+    coords = jnp.arange(n, dtype=jnp.uint32)
+    step = jnp.asarray(step, jnp.uint32)
+    u = mask_u32(seed, tensor_id, step[..., None], coords)
+    thr = quant_threshold_u24(q, bits)
+    return ((u >> np.uint32(8)) < thr).astype(jnp.float32)
 
 
 def sample_mask(p, key):

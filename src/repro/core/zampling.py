@@ -38,6 +38,7 @@ from .sampling import (
     discretize_mask,
     init_scores,
     sample_mask_hash,
+    sample_mask_qhash,
     sample_mask_st_hash,
 )
 
@@ -92,34 +93,48 @@ class ZamplingSpecs:
     def compression(self) -> float:
         return self.m_total / max(self.n_total, 1)
 
-    def comm_bits_per_round(self, packed: bool = True) -> Dict[str, int]:
+    def comm_bits_per_round(self, packed: bool = True,
+                            downlink: str = "f32") -> Dict[str, int]:
         """Analytic communication accounting (paper Table 1).
 
         ``client_up``/``server_down`` are the paper's IDEALIZED figures
-        (n mask bits up, n f32 scores down) and deliberately ignore two
+        (n mask bits up, n score coordinates down at the configured
+        downlink codec's b bits each) and deliberately ignore two
         real-wire costs: (a) masks travel as uint32 lanes, so each
         tensor pays up to 31 bits of lane padding, and (b) the dense
         (non-reparametrized) leaves are trained and averaged too, f32
         both ways.  The ``*_wire`` keys are the EXACT protocol figures
         including both — they match ``comm.metering.round_wire_report``
-        bit-for-byte (pinned in tests/test_fused.py): ``client_up_wire``
-        == 8x the metered ``uplink_bytes_per_client`` for the packed
+        bit-for-byte (pinned in tests/test_fused.py and
+        tests/test_downlink.py): ``client_up_wire`` == 8x the metered
+        ``uplink_bytes_per_client`` for the packed
         (``psum_u32``/``allgather_packed``) resp. ``mean_f32``
-        transports.
+        transports, and ``server_down_wire`` == 8x the metered
+        ``downlink_bytes_per_client`` for the configured codec.
         """
         from ..comm.bitpack import packed_len  # comm sits above core
+        from ..comm.downlink import get_codec
+        from ..comm.metering import score_downlink_bytes
 
+        codec = get_codec(downlink)
         n, m = self.n_total, self.m_total
         dense_bits = 32 * self.dense_total
         lane_bits = sum(32 * packed_len(s.n) for s in self.specs.values())
         mask_up_wire = lane_bits if packed else 32 * n
+        # the SAME per-tensor byte ceiling the metering applies, so the
+        # pinned server_down_wire == 8 x metered-bytes equality cannot
+        # drift between the two implementations
+        down_wire = sum(
+            8 * score_downlink_bytes(codec, s.n)
+            for s in self.specs.values()
+        )
         return {
             "naive_client_up": 32 * m,
             "client_up": n if packed else 8 * n,
-            "server_down": 32 * n,
+            "server_down": codec.bits * n,
             "naive_server_down": 32 * m,
             "client_up_wire": mask_up_wire + dense_bits,
-            "server_down_wire": 32 * n + dense_bits,
+            "server_down_wire": down_wire + dense_bits,
         }
 
 
@@ -258,8 +273,15 @@ class MaskProgram:
     equality, forward and gradient) by the shared hash-RNG keying.
     ``packed`` selects the upload representation: uint32 wire lanes
     (what the packed transports move) vs the f32 {0,1} mask.
-    ``step`` everywhere below is the uint32 draw-counter word; callers
-    derive it from their PRNG key + round/client/local-step counters
+    ``downlink`` names the registered ``comm.downlink`` codec of the
+    server broadcast: the ``*_from_wire`` methods below consume the
+    ENCODED score pytree directly — for the quantized codecs the
+    sample-mode draw is the widened-threshold integer compare
+    (``core.sampling.sample_mask_qhash``; in the fused kernels via
+    ``ops.sample_reconstruct(..., qbits=b)``), so no dequantized f32
+    score slab exists on the draw path.  ``step`` everywhere below is
+    the uint32 draw-counter word; callers derive it from their PRNG
+    key + round/client/local-step counters
     (``core.sampling.key_word``/``fold_word``).
     """
 
@@ -267,10 +289,43 @@ class MaskProgram:
     mode: str = "sample"
     fused: bool = True
     packed: bool = False
+    downlink: str = "f32"  # registered comm.downlink codec name
     impl: Optional[str] = None  # kernels impl override (None = default)
 
     def __post_init__(self):
         validate_mask_mode(self.mode)
+
+    @property
+    def codec(self):
+        """The resolved downlink codec (raises on unknown names)."""
+        from ..comm.downlink import get_codec  # comm sits above core
+
+        return get_codec(self.downlink)
+
+    def _wire_words(self, wire_scores, path: str):
+        """Validate + fetch one tensor's encoded broadcast words."""
+        codec = self.codec
+        q = wire_scores[path]
+        if jnp.asarray(q).dtype != jnp.dtype(codec.wire_dtype):
+            raise ValueError(
+                f"score leaf {path!r} has dtype {jnp.asarray(q).dtype}, "
+                f"but downlink codec {codec.name!r} carries "
+                f"{jnp.dtype(codec.wire_dtype).name}; encode the state "
+                f"first (core.federated.encode_state)"
+            )
+        return q
+
+    def decode_scores(self, wire_scores) -> Dict[str, Any]:
+        """Encoded broadcast -> the client's f32 trainable score copy
+        (identity for the ``f32`` oracle codec — same arrays, so the
+        f32 path stays bit-identical to the pre-codec protocol)."""
+        codec = self.codec
+        if not codec.quantized:
+            return dict(wire_scores)
+        return {
+            path: codec.decode(spec, self._wire_words(wire_scores, path))
+            for path, spec in self.zspecs.specs.items()
+        }
 
     # -- composed masks ------------------------------------------------
     def mask(self, p, spec: QSpec, step):
@@ -353,14 +408,102 @@ class MaskProgram:
                                              step)
         return out
 
+    # -- drawing straight from the encoded broadcast -------------------
+    def mask_from_wire(self, q, spec: QSpec, step):
+        """One tensor's mask from its ENCODED broadcast words.  Sample
+        mode is the widened-threshold integer compare — bit-identical
+        to ``self.mask(codec.decode(q), ...)`` without materializing
+        the decoded f32 probabilities (discretize compares the
+        threshold against 2^23, i.e. p_hat >= 0.5)."""
+        codec = self.codec
+        if not codec.quantized:
+            return self.mask(clip_probs(q), spec, step)
+        if self.mode == "sample":
+            return sample_mask_qhash(q, codec.bits, spec.seed,
+                                     spec.tensor_id, step)
+        if self.mode == "continuous":
+            return codec.decode(spec, q)
+        thr = codec.threshold_u24(q)
+        return (thr >= jnp.uint32(1 << 23)).astype(jnp.float32)
+
+    def masks_from_wire(self, wire_scores, step) -> Dict[str, Any]:
+        """{path: mask} drawn directly from the encoded broadcast."""
+        return {
+            path: self.mask_from_wire(self._wire_words(wire_scores, path),
+                                      spec, step)
+            for path, spec in self.zspecs.specs.items()
+        }
+
+    def weights_from_wire(self, wire_scores, dense, step,
+                          constraints: Optional[Dict[str, Any]] = None,
+                          row_sharding=None):
+        """Full param pytree sampled straight from the encoded
+        broadcast — the serving/eval path for a quantized downlink
+        state.  Gradient-free (the broadcast carries no cotangent; the
+        trainable path decodes first via ``decode_scores``).  Fused
+        sample mode hands the quantized words to the kernels
+        (``ops.sample_reconstruct(..., qbits=b)``: threshold compare
+        in-block), bit-identical to the composed
+        ``masks_from_wire`` -> ``weights_from_masks`` oracle."""
+        codec = self.codec
+        if not codec.quantized:
+            return self.weights(wire_scores, dense, step,
+                                constraints=constraints,
+                                row_sharding=row_sharding)
+        if not (self.fused and self.mode == "sample"):
+            return weights_from_masks(
+                self.zspecs, self.masks_from_wire(wire_scores, step),
+                {"dense": dense}, constraints=constraints,
+                row_sharding=row_sharding, impl=self.impl,
+            )
+        from ..kernels import ops  # late import: kernels sit above core
+
+        tmpl = dict(_flatten(self.zspecs.template))
+        leaves = {}
+        for path, spec in self.zspecs.specs.items():
+            w = ops.sample_reconstruct(
+                spec, self._wire_words(wire_scores, path), step,
+                qbits=codec.bits, dtype=tmpl[path].dtype,
+                chunks=self.zspecs.config.chunks, impl=self.impl,
+                row_sharding=row_sharding,
+            )
+            if constraints is not None and path in constraints:
+                w = jax.lax.with_sharding_constraint(w, constraints[path])
+            leaves[path] = w
+        for path in self.zspecs.dense_paths:
+            leaves[path] = dense[path]
+        return unflatten_like(self.zspecs.template, leaves)
+
+
+def infer_downlink(scores) -> str:
+    """Infer the broadcast codec of a score pytree from its leaf dtypes
+    — floating leaves are plain/``f32`` scores, uint leaves name the
+    quantized codec that carries them (each codec has a unique wire
+    dtype).  Lets ``sample_weights``/``evaluate`` consume a
+    codec-encoded round carry directly."""
+    from ..comm.downlink import codec_for_dtype  # comm sits above core
+
+    dtypes = {jnp.asarray(v).dtype for v in scores.values()}
+    names = {codec_for_dtype(dt).name for dt in dtypes}
+    if len(names) > 1:
+        raise ValueError(
+            f"score leaves mix downlink representations {sorted(names)}"
+        )
+    return names.pop() if names else "f32"
+
 
 def sample_masks(zspecs: ZamplingSpecs, state, key, mode: Optional[str] = None):
     """{path: z} straight-through masks, one fresh draw per tensor.
 
     ``key``: a PRNG key or uint32 draw word (``core.sampling.as_word``).
+    Codec-encoded score states (a quantized round carry) are detected
+    by dtype and drawn through the widened-threshold integer compare.
     """
+    downlink = infer_downlink(state["scores"])
     program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
-                          fused=False)
+                          fused=False, downlink=downlink)
+    if program.codec.quantized:
+        return program.masks_from_wire(state["scores"], as_word(key))
     return program.masks(state["scores"], as_word(key))
 
 
@@ -396,15 +539,33 @@ def weights_from_masks(zspecs: ZamplingSpecs, masks, state,
 def sample_weights(zspecs: ZamplingSpecs, state, key,
                    mode: Optional[str] = None,
                    constraints: Optional[Dict[str, Any]] = None,
-                   row_sharding=None, fused: bool = True):
+                   row_sharding=None, fused: bool = True,
+                   downlink: Optional[str] = None):
     """One fresh sampled network: params pytree matching the template.
 
     Routes through ``MaskProgram``: with ``fused`` (default) the
     sample-mode draw happens inside the fused reconstruction kernel;
-    ``fused=False`` is the composed bit-exact oracle.
+    ``fused=False`` is the composed bit-exact oracle.  Codec-encoded
+    score states (a quantized round carry) are detected by dtype
+    (``downlink=None``) and sampled straight from the wire words —
+    ``train.local.evaluate`` works on the encoded carry unchanged.  An
+    explicit ``downlink`` must agree with the state's representation
+    (the leaf dtypes determine it uniquely; treating wire words as f32
+    scores would silently clip them all to p=1).
     """
+    carried = infer_downlink(state["scores"])
+    if downlink is not None and downlink != carried:
+        raise ValueError(
+            f"downlink={downlink!r} does not match the state's score "
+            f"representation ({carried!r} by leaf dtype)"
+        )
+    downlink = carried
     program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
-                          fused=fused)
+                          fused=fused, downlink=downlink)
+    if program.codec.quantized:
+        return program.weights_from_wire(
+            state["scores"], state["dense"], as_word(key),
+            constraints=constraints, row_sharding=row_sharding)
     return program.weights(state["scores"], state["dense"], as_word(key),
                            constraints=constraints,
                            row_sharding=row_sharding)

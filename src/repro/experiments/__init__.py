@@ -1,5 +1,6 @@
 from .paper import (
     comm_savings_table,
+    run_downlink_tradeoff,
     run_federated,
     run_integrality,
     run_local_compression,
@@ -9,7 +10,7 @@ from .paper import (
 )
 
 __all__ = [
-    "comm_savings_table", "run_federated", "run_integrality",
-    "run_local_compression", "run_sensitivity", "run_wire_formats",
-    "run_zhou_comparison",
+    "comm_savings_table", "run_downlink_tradeoff", "run_federated",
+    "run_integrality", "run_local_compression", "run_sensitivity",
+    "run_wire_formats", "run_zhou_comparison",
 ]

@@ -247,6 +247,54 @@ def run_wire_formats(quick: bool = True) -> List[Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Downlink codecs — the accuracy / downlink-bits trade-off knob
+# ---------------------------------------------------------------------------
+
+def run_downlink_tradeoff(quick: bool = True) -> List[Dict]:
+    """The paper's headline as a tunable protocol knob: the same
+    federated run per registered downlink codec (f32 oracle, u16, u8),
+    reporting final sampled accuracy against metered downlink bytes.
+    The f32 row is the bit-exact baseline; quantized rows trade the
+    2x/4x broadcast reduction for the codec's rounding noise in the
+    round dynamics (the draws themselves stay exactly unbiased at the
+    decoded probability — see comm.downlink)."""
+    from ..comm.downlink import codec_names
+    from ..core import encode_state
+    from ..train import federated_fit
+
+    ds = _dataset()
+    acc = _acc_fn(ds)
+    K, E = 4, 10 if quick else 40
+    rounds = 10 if quick else 50
+    rows = []
+    for name in codec_names(include_aliases=False):
+        zspecs, state = _setup(SMALL_DIMS, 8, d=10, seed=1)
+        cfg = FederatedConfig(num_clients=K, local_steps=E, local_lr=0.5,
+                              aggregate="psum_u32", downlink=name)
+        state = encode_state(zspecs, cfg, state)
+        clients = iid_client_split(ds, K, seed=0)
+        stream = client_batch_stream(clients, 64, E, seed=0)
+        xs, ys = zip(*(next(stream) for _ in range(rounds)))
+        batches = {"x": jnp.asarray(np.stack(xs)),
+                   "y": jnp.asarray(np.stack(ys))}
+        state, mets = jax.jit(
+            lambda s, b, k, cfg=cfg, zs=zspecs: federated_fit(
+                zs, s, mlp_loss, b, k, cfg)
+        )(state, batches, jax.random.PRNGKey(0))
+        ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
+                            n_samples=10)
+        rep = round_wire_report(zspecs, cfg.aggregate, K, downlink=name)
+        rows.append({
+            "bench": "downlink_tradeoff", "codec": name, "K": K,
+            "rounds": rounds, "final_sampled_acc": ms, "sampled_std": mstd,
+            "final_loss": float(np.asarray(mets["loss"])[-1]),
+            "downlink_bytes_per_client": rep["downlink_bytes_per_client"],
+            "downlink_vs_f32": rep["downlink_vs_f32"],
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # §3.3 / Table 4 — sensitivity: sampled vs regular training
 # ---------------------------------------------------------------------------
 

@@ -57,10 +57,17 @@ and gradient, per impl (tests/test_fused.py).  ``sample_pack``
 (+``_batched``) is the end-of-round upload draw: probs in, uint32
 wire lanes out (``comm.bitpack.pack_mask`` layout), fed natively to
 the packed transports.  Both carry the same custom_vmap rules as the
-composed ops.  The default impl honors the ``REPRO_RECONSTRUCT_IMPL``
-env override (mirroring ``REPRO_BATCH_MAP_THRESHOLD``); benchmarks
-(bench_fused -> BENCH_reconstruct.json ``fused_mask_lifecycle`` rows)
-track fused-vs-composed at the Zhou-retrieval spec point.
+composed ops.  ``sample_reconstruct(..., qbits=b)`` additionally
+accepts the QUANTIZED downlink broadcast (the ``comm.downlink``
+codec's b-bit probability words): the in-op draw is the
+widened-threshold integer compare (``core.sampling
+.sample_mask_qhash``), bit-identical to the f32 draw on the decoded
+probabilities, and gradient-free (training decodes first — see
+``core.zampling.MaskProgram``).  The default impl honors the
+``REPRO_RECONSTRUCT_IMPL`` env override (mirroring
+``REPRO_BATCH_MAP_THRESHOLD``); benchmarks (bench_fused ->
+BENCH_reconstruct.json ``fused_mask_lifecycle`` rows) track
+fused-vs-composed at the Zhou-retrieval spec point.
 """
 
 from __future__ import annotations
@@ -74,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.qspec import QSpec, padded_row_window, row_indices, row_values
-from ..core.sampling import sample_mask_hash
+from ..core.sampling import sample_mask_hash, sample_mask_qhash
 from ..core.transpose_plan import (
     build_transpose_plan,
     plan_window_apply,
@@ -495,39 +502,47 @@ def reconstruct_batched(spec: QSpec, Z, *, dtype=jnp.float32,
 # bit-exactness contract is exact equality, forward and gradient.
 # ---------------------------------------------------------------------------
 
-def _sample_one(spec: QSpec, p, step):
-    """The oracle draw for one client: z (n,) f32 in {0,1}."""
+def _sample_one(spec: QSpec, p, step, qbits=None):
+    """The oracle draw for one client: z (n,) f32 in {0,1}.  With
+    ``qbits`` the operand is the quantized broadcast words and the draw
+    is the widened-threshold integer compare (``sample_mask_qhash``)."""
+    if qbits is not None:
+        return sample_mask_qhash(p, qbits, spec.seed, spec.tensor_id, step)
     return sample_mask_hash(p, spec.seed, spec.tensor_id, step)
 
 
-def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size):
+def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size,
+                   qbits=None):
     if model_size is not None and spec.shard_count > 1:
         from .qz_sharded import sharded_reconstruct
 
-        return sharded_reconstruct(spec, _sample_one(spec, p, step),
+        return sharded_reconstruct(spec, _sample_one(spec, p, step, qbits),
                                    model_size)
     if impl == "pallas":
         assert spec.shard_count == 1, "pallas path is single-block layout"
-        return _unmove(spec, _pk.qz_sample_reconstruct_fwd(spec, p, step))
-    z = _sample_one(spec, p, step)
+        return _unmove(spec, _pk.qz_sample_reconstruct_fwd(spec, p, step,
+                                                           qbits=qbits))
+    z = _sample_one(spec, p, step, qbits)
     if chunks > 1:
         return _ref_chunked(spec, z, chunks)
     return reconstruct_ref(spec, z, dtype=jnp.float32)
 
 
-def _fwd_many_fused(spec: QSpec, P, steps, impl, chunks, model_size):
+def _fwd_many_fused(spec: QSpec, P, steps, impl, chunks, model_size,
+                    qbits=None):
     if model_size is not None and spec.shard_count > 1:
         from .qz_sharded import sharded_reconstruct_batched
 
         return sharded_reconstruct_batched(
-            spec, _sample_one(spec, P, steps), model_size
+            spec, _sample_one(spec, P, steps, qbits), model_size
         )
     if impl == "pallas":
         assert spec.shard_count == 1, "pallas path is single-block layout"
         return _unmove_batched(
-            spec, _pk.qz_sample_reconstruct_batched_fwd(spec, P, steps)
+            spec, _pk.qz_sample_reconstruct_batched_fwd(spec, P, steps,
+                                                        qbits=qbits)
         )
-    Z = _sample_one(spec, P, steps)
+    Z = _sample_one(spec, P, steps, qbits)
     if chunks > 1:
         return _ref_chunked_batched(spec, Z, chunks)
     return reconstruct_batched_ref(spec, Z, dtype=jnp.float32)
@@ -598,9 +613,40 @@ _sample_reconstruct_b = _make_sample_reconstruct_op(_fwd_many_fused,
                                                     _bwd_many)
 
 
+@functools.lru_cache(maxsize=256)
+def _fused_q_cores(spec: QSpec, qbits: int, impl: str, chunks: int,
+                   model_size):
+    """vmap-aware QUANTIZED fused forward: the operand is the downlink
+    codec's b-bit probability words and the in-op draw is the
+    widened-threshold integer compare.  No custom_vjp — integer wire
+    words carry no cotangent (the trainable path decodes first; see
+    ``core.zampling.MaskProgram``)."""
+
+    @jax.custom_batching.custom_vmap
+    def core(q, step):
+        return _fwd_one_fused(spec, q, step, impl, chunks, model_size,
+                              qbits)
+
+    @core.def_vmap
+    def _rule(axis_size, in_batched, Q, steps):
+        qb, sb = in_batched
+        if not qb and not sb:
+            return _fwd_one_fused(spec, Q, steps, impl, chunks, model_size,
+                                  qbits), False
+        if not qb:
+            Q = jnp.broadcast_to(Q, (axis_size, *Q.shape))
+        if not sb:
+            steps = jnp.broadcast_to(steps, (axis_size,))
+        return _fwd_many_fused(spec, Q, steps, impl, chunks, model_size,
+                               qbits), True
+
+    return core
+
+
 def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
                        chunks: int = 1, impl: Optional[str] = None,
-                       model_size: Optional[int] = None, row_sharding=None):
+                       model_size: Optional[int] = None, row_sharding=None,
+                       qbits: Optional[int] = None):
     """w = Q·Bern(p) fused: probabilities in, weights out.
 
     ``step`` is the uint32 draw-counter word (``core.sampling``); the
@@ -610,9 +656,21 @@ def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
     ``grad_p = Q^T grad_w``; chain through ``clip_probs`` for the
     paper's ``⊙ 1_{0<s<1}`` gate.  Same impl dispatch as
     ``reconstruct``.
+
+    ``qbits``: the operand is a QUANTIZED downlink broadcast — b-bit
+    probability words from the ``comm.downlink`` codec — and the in-op
+    draw is the widened-threshold integer compare, bit-identical to
+    the f32 path on the codec's decoded probabilities
+    (``sample_mask_qhash``).  That path is gradient-free (wire words
+    carry no cotangent); training decodes first.
     """
     model_size = _resolve_model_size(model_size, row_sharding)
     impl = impl or _default_impl()
+    if qbits is not None:
+        w = _fused_q_cores(spec, int(qbits), impl, int(chunks), model_size)(
+            jnp.asarray(p).astype(jnp.uint32),
+            jnp.asarray(step, jnp.uint32))
+        return w.astype(dtype)
     w = _sample_reconstruct(spec, p.astype(jnp.float32),
                             jnp.asarray(step, jnp.uint32), impl,
                             int(chunks), model_size)
@@ -622,13 +680,20 @@ def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
 def sample_reconstruct_batched(spec: QSpec, P, steps, *, dtype=jnp.float32,
                                chunks: int = 1, impl: Optional[str] = None,
                                model_size: Optional[int] = None,
-                               row_sharding=None):
+                               row_sharding=None,
+                               qbits: Optional[int] = None):
     """Fused W = Q·Bern(p^(k)) for K stacked clients: P (K, n) probs +
-    steps (K,) draw words -> (K, *spec.shape)."""
+    steps (K,) draw words -> (K, *spec.shape).  ``qbits`` as
+    ``sample_reconstruct``: P is the (K, n) quantized word slab."""
     if P.ndim != 2 or P.shape[-1] != spec.n:
         raise ValueError(f"P has shape {P.shape}, spec expects (K, {spec.n})")
     model_size = _resolve_model_size(model_size, row_sharding)
     impl = impl or _default_impl()
+    if qbits is not None:
+        W = _fwd_many_fused(spec, jnp.asarray(P).astype(jnp.uint32),
+                            jnp.asarray(steps, jnp.uint32), impl,
+                            int(chunks), model_size, int(qbits))
+        return W.astype(dtype)
     W = _sample_reconstruct_b(spec, P.astype(jnp.float32),
                               jnp.asarray(steps, jnp.uint32), impl,
                               int(chunks), model_size)

@@ -87,6 +87,14 @@ contraction:
    step per z-window emits ``window/32`` lanes (requires
    ``window % 32 == 0``; smaller windows fall back to the jnp oracle
    in ``ops``).
+ - QUANTIZED operand (``qbits``, the downlink codec subsystem): the
+   fused forward also accepts the server's b-bit broadcast words
+   (``comm.downlink`` ``u8``/``u16``) instead of f32 probabilities —
+   the in-block draw becomes the widened-threshold integer compare
+   ``(hash >> 8) < q<<(24-b) + (q<<(24-b))//(2^b-1)`` (uint32 shifts +
+   one constant divide on the VPU), so the dequantized f32 score
+   vector never exists in HBM or VMEM.  Bit-identical to the f32 draw
+   on the codec's decoded probabilities (tests/test_downlink.py).
 
 VMEM budget for the fused batched forward at bm=256, window=512, d=8,
 K=32 (f32): p-slab 512·32·4 = 64 KiB, in-block z-slab (same shape)
@@ -116,11 +124,12 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.hashrng import bernoulli_u32
 from ..core.qspec import QSpec, row_indices, row_values
-from ..core.sampling import mask_u32
+from ..core.sampling import mask_u32, quant_threshold_u24
 from ..core.transpose_plan import build_block_plan
 
 DEFAULT_BM = 256
@@ -404,12 +413,19 @@ def qz_reconstruct_batched_bwd_plan(spec: QSpec, grad_W, *,
 # The mask z is a transient in-block value, never an HBM array.
 # ---------------------------------------------------------------------------
 
-def _window_mask(spec: QSpec, step, p_win):
+def _window_mask(spec: QSpec, step, p_win, qbits=None):
     """Draw this grid step's z-window in-block from the hash RNG.
 
     ``step`` is the traced uint32 draw-counter word; coordinates are
     the window's global z indices, so the bits are identical to the
     oracle's ``sample_mask_hash`` over the full (n,) vector.
+
+    With ``qbits`` the operand is the QUANTIZED probability window
+    (uint32 b-bit words from the downlink codec, ``comm.downlink``)
+    and the draw is the widened-threshold integer compare
+    ``(u >> 8) < quant_threshold_u24(q)`` — pure uint32 shifts and a
+    constant divide, no dequantized f32 probabilities even in-block —
+    bit-identical to the oracle's ``sample_mask_qhash``.
     """
     i = pl.program_id(0)
     coords = i * spec.window + jax.lax.iota(jnp.int32, spec.window)
@@ -418,23 +434,36 @@ def _window_mask(spec: QSpec, step, p_win):
                      coords[:, None])
     else:
         u = mask_u32(spec.seed, spec.tensor_id, step, coords)
-    return bernoulli_u32(u, p_win)
+    if qbits is None:
+        return bernoulli_u32(u, p_win.astype(jnp.float32))
+    thr = quant_threshold_u24(p_win, qbits)
+    return ((u >> np.uint32(8)) < thr).astype(jnp.float32)
 
 
-def _sfwd_kernel(p_ref, step_ref, w_ref, *, spec: QSpec, bm: int, bpw: int):
+def _sfwd_kernel(p_ref, step_ref, w_ref, *, spec: QSpec, bm: int, bpw: int,
+                 qbits=None):
     idx, vals = _block_rows(spec, bm, masked=False)
-    zwin = _window_mask(spec, step_ref[0], p_ref[...].astype(jnp.float32))
+    zwin = _window_mask(spec, step_ref[0], p_ref[...], qbits=qbits)
     zsel = jnp.dot(_onehot(idx, spec.window), zwin,
                    preferred_element_type=jnp.float32)
     w_ref[...] = jnp.sum(vals * zsel.reshape(bm, spec.d), axis=-1)
 
 
 def qz_sample_reconstruct_fwd(spec: QSpec, p, step, *, bm: int = DEFAULT_BM,
-                              interpret: bool = True):
-    """Fused Pallas forward: p (n,) f32 + step word -> w (m,) f32 (flat)."""
+                              interpret: bool = True, qbits=None):
+    """Fused Pallas forward: p (n,) f32 + step word -> w (m,) f32 (flat).
+
+    With ``qbits`` the operand is the quantized broadcast (b-bit
+    probability words, shipped into the kernel as uint32) and the
+    in-block draw is the widened-threshold integer compare — the
+    dequantized f32 score vector never exists, in HBM or VMEM.
+    """
     nw, bpw, m_grid = _grid_dims(spec, bm)
+    operand = (p.astype(jnp.float32) if qbits is None
+               else jnp.asarray(p).astype(jnp.uint32))
     out = pl.pallas_call(
-        functools.partial(_sfwd_kernel, spec=spec, bm=bm, bpw=bpw),
+        functools.partial(_sfwd_kernel, spec=spec, bm=bm, bpw=bpw,
+                          qbits=qbits),
         grid=(nw, bpw),
         in_specs=[
             pl.BlockSpec((spec.window,), lambda i, j: (i,)),
@@ -443,17 +472,17 @@ def qz_sample_reconstruct_fwd(spec: QSpec, p, step, *, bm: int = DEFAULT_BM,
         out_specs=pl.BlockSpec((bm,), lambda i, j: (i * bpw + j,)),
         out_shape=jax.ShapeDtypeStruct((m_grid,), jnp.float32),
         interpret=interpret,
-    )(p.astype(jnp.float32), jnp.asarray(step, jnp.uint32).reshape(1))
+    )(operand, jnp.asarray(step, jnp.uint32).reshape(1))
     if bpw * bm != spec.rows_per_window:
         out = out.reshape(nw, bpw * bm)[:, : spec.rows_per_window].reshape(-1)
     return out[: spec.m]
 
 
 def _sbfwd_kernel(pt_ref, steps_ref, w_ref, *, spec: QSpec, bm: int,
-                  nclients: int):
+                  nclients: int, qbits=None):
     idx, vals = _block_rows(spec, bm, masked=False)
-    slab = _window_mask(spec, steps_ref[...],
-                        pt_ref[...].astype(jnp.float32))  # (window, K)
+    slab = _window_mask(spec, steps_ref[...], pt_ref[...],
+                        qbits=qbits)  # (window, K)
     zsel = jnp.dot(_onehot(idx, spec.window), slab,
                    preferred_element_type=jnp.float32)
     w_ref[...] = jnp.sum(
@@ -463,14 +492,21 @@ def _sbfwd_kernel(pt_ref, steps_ref, w_ref, *, spec: QSpec, bm: int,
 
 def qz_sample_reconstruct_batched_fwd(spec: QSpec, P, steps, *,
                                       bm: int = DEFAULT_BM,
-                                      interpret: bool = True):
-    """Fused batched forward: P (K, n) probs + steps (K,) -> W (K, m)."""
+                                      interpret: bool = True, qbits=None):
+    """Fused batched forward: P (K, n) probs + steps (K,) -> W (K, m).
+
+    ``qbits``: as ``qz_sample_reconstruct_fwd`` — P is the (K, n)
+    quantized word slab and the draw stays integer in-block.
+    """
     nclients = P.shape[0]
     nw, bpw, m_grid = _grid_dims(spec, bm)
-    pt = P.astype(jnp.float32).T  # (n, K) — window-major p-slabs
+    if qbits is None:
+        pt = P.astype(jnp.float32).T  # (n, K) — window-major p-slabs
+    else:
+        pt = jnp.asarray(P).astype(jnp.uint32).T
     out = pl.pallas_call(
         functools.partial(_sbfwd_kernel, spec=spec, bm=bm,
-                          nclients=nclients),
+                          nclients=nclients, qbits=qbits),
         grid=(nw, bpw),
         in_specs=[
             pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0)),

@@ -16,6 +16,18 @@ fit over R rounds is numerically the same computation as R sequential
 production mesh, where each shard sees its own (R, E, ...) batch slab
 and the per-round mask aggregation stays a single collective
 (``FederatedConfig.aggregate`` selects the wire transport).
+
+Downlink codec (``FederatedConfig.downlink``, ``comm.downlink``): the
+scan CARRY is the codec-encoded score pytree — each round decodes the
+broadcast client-side, trains, aggregates, and re-encodes, so with a
+quantized codec (``u8``/``u16``) the carried state between rounds IS
+the metered wire representation (uint8/uint16 words), never an f32
+score slab.  Callers encode an f32 init state once with
+``core.federated.encode_state`` before the first round; ``f32``
+(default) carries plain scores, bit-identical to the pre-codec
+drivers.  The encode dither word is derived from (round key,
+round_index) only, so the fit ≡ R-sequential-rounds equivalence holds
+per codec.
 """
 
 from __future__ import annotations
