@@ -434,6 +434,90 @@ def bench_downlink(full=False):
     return rows
 
 
+def bench_faults(full=False):
+    """Fault-tolerant partial-participation round engine (this PR's
+    tentpole): full federated rounds through the weighted-aggregation
+    path at dropout rates {0, 0.2, 0.5} vs the plain PR-5 protocol.
+
+    Bit-exactness asserted PRE-TIMING: the zero-fault participation
+    round (every client at weight 1, an all-zero FaultPlan) must
+    reproduce the plain round's aggregated scores and loss bit for
+    bit at each K.  ``fault_overhead`` is the zero-fault round's
+    wall-clock over the plain round's (alternating-run medians) — the
+    price of carrying fault draws, upload checksums, and weighted
+    psums through a round nothing goes wrong in; scripts/ci.sh fails
+    if the committed baseline shows > 1.05x.  Rows land in
+    BENCH_reconstruct.json keyed (bench, K, strategy=dropout level).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (
+        FederatedConfig, ZamplingConfig, build_specs, init_state,
+    )
+    from repro.core.federated import federated_round
+    from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
+    from repro.fault import FaultPlan
+    from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_loss
+
+    ds = make_teacher_dataset(n_train=2000, n_test=200, seed=0)
+    template = init_mlp_params(jax.random.PRNGKey(0), SMALL_DIMS)
+    zspecs = build_specs(template, ZamplingConfig(
+        compression=8.0, d=10, window=128, min_size=128))
+    state0 = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
+    rows = []
+    for K in (10, 32):
+        clients = iid_client_split(ds, K)
+        xs, ys = next(client_batch_stream(clients, 64, 2, seed=0))
+        batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+        cfg = FederatedConfig(num_clients=K, local_steps=2, local_lr=0.5,
+                              aggregate="psum_u32")
+        key = jax.random.PRNGKey(0)
+        ids = jnp.arange(K, dtype=jnp.uint32)
+        ones = jnp.ones(K, jnp.uint32)
+        f_plain = jax.jit(lambda s, b, k, cfg=cfg: federated_round(
+            zspecs, s, mlp_loss, b, k, cfg))
+        for p in (0.0, 0.2, 0.5):
+            plan = FaultPlan(dropout=p)
+            f_fault = jax.jit(
+                lambda s, b, k, cfg=cfg, plan=plan: federated_round(
+                    zspecs, s, mlp_loss, b, k, cfg, client_ids=ids,
+                    weights=ones, faults=plan))
+            st_f, met = f_fault(state0, batch, key)
+            jax.block_until_ready(st_f)
+            assert np.isfinite(float(met["loss"]))
+            if p == 0.0:
+                # the acceptance gate, before any timing: zero faults
+                # == the plain protocol, bit for bit
+                st_p, met_p = f_plain(state0, batch, key)
+                for path in st_p["scores"]:
+                    np.testing.assert_array_equal(
+                        np.asarray(st_p["scores"][path]),
+                        np.asarray(st_f["scores"][path]),
+                        err_msg=f"zero-fault scores diverge at {path}",
+                    )
+                assert (np.float32(met_p["loss"]).view(np.uint32)
+                        == np.float32(met["loss"]).view(np.uint32)), \
+                    "zero-fault loss not bit-identical to the plain round"
+            iters = 20 if full else 8
+            us_fault, us_plain = _ab_median(
+                lambda: f_fault(state0, batch, key),
+                lambda: f_plain(state0, batch, key), iters)
+            rows.append({
+                "bench": "fault_round", "strategy": f"dropout{p:g}",
+                "K": K, "n": zspecs.n_total, "dropout": p,
+                "us": us_fault, "plain_us": us_plain,
+                "fault_overhead": us_fault / us_plain,
+                "num_participating": float(met["num_participating"]),
+            })
+            _emit(f"fault_round_dropout{p:g}_K{K}", us_fault,
+                  f"plain={us_plain:.0f}us"
+                  f";overhead={us_fault / us_plain:.3f}x"
+                  f";part={float(met['num_participating']):.0f}/{K}")
+    return rows
+
+
 def _ab_median(f_a, f_b, iters):
     """Median us of each side, alternating runs (load drift cancels)."""
     import jax
@@ -755,6 +839,7 @@ BENCHES = {
     "threshold": bench_threshold,
     "wire": bench_wire,
     "downlink": bench_downlink,
+    "faults": bench_faults,
     "wire_formats": bench_wire_formats,
     "downlink_tradeoff": bench_downlink_tradeoff,
     "table1": bench_table1,
@@ -780,7 +865,7 @@ def main() -> None:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
             if name in ("kernel", "fedround", "fused", "bwd", "threshold",
-                        "wire", "downlink"):
+                        "wire", "downlink", "faults"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

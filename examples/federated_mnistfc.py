@@ -16,7 +16,18 @@ compiles ONE (block, K, E)-shaped program and re-dispatches it per
 eval block, instead of one dispatch (and, across (K, E) changes, one
 compile) per round.
 
+Partial participation (``repro.fault``): ``--population N`` switches
+to a Dirichlet-split population of N virtual clients of UNEQUAL size,
+of which ``--cohort K`` are sampled each round by the deterministic
+counter-hash cohort draw; ``--dropout-rate p`` makes each sampled
+client drop the round with probability p (drawn reproducibly per
+(round, client)).  The server then computes the sample-count-weighted
+mean over the realized survivors and the run prints a per-round
+participation/fault table with the REALIZED wire bytes.
+
   PYTHONPATH=src python examples/federated_mnistfc.py [--rounds 25]
+  PYTHONPATH=src python examples/federated_mnistfc.py \
+      --population 100 --cohort 10 --dropout-rate 0.2
 """
 
 import argparse
@@ -29,7 +40,14 @@ from repro.comm.metering import downlink_table, round_wire_report, wire_table
 from repro.core import (
     FederatedConfig, ZamplingConfig, build_specs, encode_state, init_state,
 )
-from repro.data import client_batch_stream, iid_client_split, make_teacher_dataset
+from repro.data import (
+    client_batch_stream,
+    cohort_batch_stream,
+    dirichlet_client_split,
+    iid_client_split,
+    make_teacher_dataset,
+)
+from repro.fault import ClientPopulation, FaultPlan
 from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_accuracy, mlp_loss
 from repro.train import evaluate, federated_fit
 
@@ -44,7 +62,23 @@ ap.add_argument("--downlink", default="u8",
                 help="server broadcast codec: f32 | u16 | u8")
 ap.add_argument("--block", type=int, default=5,
                 help="rounds per compiled scan block (and eval period)")
+ap.add_argument("--population", type=int, default=0,
+                help="total virtual clients N (0 = every client "
+                     "participates every round, the paper's setup)")
+ap.add_argument("--cohort", type=int, default=0,
+                help="clients sampled per round (default: --clients)")
+ap.add_argument("--dropout-rate", type=float, default=0.0,
+                help="per-round probability a sampled client drops")
+ap.add_argument("--beta", type=float, default=0.5,
+                help="Dirichlet concentration of the non-IID split")
+ap.add_argument("--min-clients", type=int, default=1,
+                help="skip rounds with fewer survivors than this")
 args = ap.parse_args()
+
+use_cohort = args.population > 0
+cohort = args.cohort or args.clients
+if use_cohort and cohort > args.population:
+    ap.error(f"--cohort {cohort} exceeds --population {args.population}")
 
 ds = make_teacher_dataset(n_train=8000, n_test=1500, seed=0)
 template = init_mlp_params(jax.random.PRNGKey(0), SMALL_DIMS)
@@ -52,7 +86,8 @@ zspecs = build_specs(template, ZamplingConfig(
     compression=args.compression, d=10, window=128, min_size=128))
 state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
 
-rep = round_wire_report(zspecs, args.aggregate, args.clients,
+rep = round_wire_report(zspecs, args.aggregate,
+                        cohort if use_cohort else args.clients,
                         downlink=args.downlink)
 print(f"m={zspecs.m_total} n={zspecs.n_total}; transport={rep['transport']}: "
       f"client upload {rep['uplink_bytes_per_client']/1024:.1f} KiB/round vs "
@@ -68,11 +103,27 @@ for row in downlink_table(zspecs, args.clients, aggregate=args.aggregate):
     print(f"  {row['codec']:>17}: {row['downlink_bytes_per_client']/1024:8.1f}"
           f" KiB/client/round ({row['downlink_vs_f32']:.4f}x of f32)")
 
-clients = iid_client_split(ds, args.clients)
-stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
-fcfg = FederatedConfig(num_clients=args.clients,
+if use_cohort:
+    clients, hist = dirichlet_client_split(ds, args.population,
+                                           beta=args.beta, seed=0)
+    sizes = hist.sum(axis=1)
+    pop = ClientPopulation(args.population,
+                           sample_counts=tuple(int(s) for s in sizes),
+                           seed=0)
+    plan = FaultPlan(dropout=args.dropout_rate)
+    stream = cohort_batch_stream(clients, pop, cohort, 64,
+                                 args.local_steps, seed=0)
+    print(f"population N={args.population} (Dirichlet beta={args.beta}, "
+          f"client sizes {sizes.min()}..{sizes.max()}), cohort K={cohort}, "
+          f"dropout p={args.dropout_rate}")
+else:
+    plan = None
+    clients = iid_client_split(ds, args.clients)
+    stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
+fcfg = FederatedConfig(num_clients=cohort if use_cohort else args.clients,
                        local_steps=args.local_steps, local_lr=0.5,
-                       aggregate=args.aggregate, downlink=args.downlink)
+                       aggregate=args.aggregate, downlink=args.downlink,
+                       min_clients=args.min_clients)
 # the round carry is the ENCODED broadcast: quantized codecs carry
 # uint8/uint16 wire words between rounds, never an f32 score slab
 state = encode_state(zspecs, fcfg, state)
@@ -82,23 +133,54 @@ acc = jax.jit(lambda p: mlp_accuracy(
 
 # ONE compile for the whole run: every block has the same
 # (block, K, E, batch) shape, so this traces exactly once.
-@jax.jit
-def fit_block(state, batches, key):
-    return federated_fit(zspecs, state, mlp_loss, batches, key, fcfg)
+if use_cohort:
+    @jax.jit
+    def fit_block(state, batches, key, ids, weights):
+        return federated_fit(zspecs, state, mlp_loss, batches, key, fcfg,
+                             client_ids=ids, weights=weights, faults=plan)
+else:
+    @jax.jit
+    def fit_block(state, batches, key):
+        return federated_fit(zspecs, state, mlp_loss, batches, key, fcfg)
 
+
+FAULT_COLS = ("num_participating", "num_dropped", "num_stragglers",
+              "num_corrupt", "num_duplicates", "round_skipped")
 
 key = jax.random.PRNGKey(0)
 done = 0
+if use_cohort:
+    print(f"{'round':>5} {'part':>4} {'drop':>4} {'strag':>5} {'corr':>4} "
+          f"{'dup':>3} {'skip':>4} {'w_sum':>7} {'uplink KiB':>10}")
 while done < args.rounds:
     # a tail block smaller than --block recompiles once for its shape
     r = min(args.block, args.rounds - done)
-    xs, ys = zip(*(next(stream) for _ in range(r)))
     key, sub = jax.random.split(key)
-    state, mets = fit_block(
-        state,
-        {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))},
-        sub,
-    )
+    if use_cohort:
+        ids, ws, xs, ys = zip(*(next(stream) for _ in range(r)))
+        state, mets = fit_block(
+            state,
+            {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))},
+            sub, jnp.asarray(np.stack(ids)), jnp.asarray(np.stack(ws)),
+        )
+        cols = {c: np.asarray(mets[c]) for c in FAULT_COLS}
+        up = np.asarray(mets["uplink_bytes_round"])
+        wsum = np.asarray(mets["weight_sum"])
+        for j in range(r):
+            print(f"{done + j:>5} {cols['num_participating'][j]:>4.0f} "
+                  f"{cols['num_dropped'][j]:>4.0f} "
+                  f"{cols['num_stragglers'][j]:>5.0f} "
+                  f"{cols['num_corrupt'][j]:>4.0f} "
+                  f"{cols['num_duplicates'][j]:>3.0f} "
+                  f"{cols['round_skipped'][j]:>4.0f} "
+                  f"{wsum[j]:>7.0f} {up[j] / 1024:>10.1f}")
+    else:
+        xs, ys = zip(*(next(stream) for _ in range(r)))
+        state, mets = fit_block(
+            state,
+            {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))},
+            sub,
+        )
     done += r
     ms, std = evaluate(zspecs, state, acc, jax.random.PRNGKey(3),
                        n_samples=10)

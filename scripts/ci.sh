@@ -112,10 +112,32 @@ if fat:
     sys.exit(f"u8 downlink bytes exceed 1/4 of f32: {fat}")
 print(f"  ok: {len(down)} downlink rows, codecs {sorted(codecs)}, "
       f"u8 <= 1/4 f32")
+
+# fault-round rows: the partial-participation engine must be measured
+# at dropout {0, 0.2, 0.5} for K in {10, 32}, and the zero-fault
+# configuration (weights all 1, empty FaultPlan) must cost <= 1.05x of
+# the plain PR-5 round — the fault machinery is free when nothing
+# fails, or the gate says otherwise.
+FAULT_KEYS = {"us", "plain_us", "fault_overhead", "dropout", "K", "n"}
+fau = [r for r in rows if r.get("bench") == "fault_round"]
+ks = {r.get("K") for r in fau}
+drops = {r.get("dropout") for r in fau}
+bad = [r for r in fau if not FAULT_KEYS <= set(r)]
+slow = [r for r in fau if r.get("dropout") == 0.0
+        and r.get("fault_overhead", 99) > 1.05]
+if not {10, 32} <= ks or not {0.0, 0.2, 0.5} <= drops or bad or slow:
+    sys.exit(f"BENCH_reconstruct.json is stale or regressed: fault rows "
+             f"for K={sorted(ks)} (need 10 and 32), dropout="
+             f"{sorted(drops)} (need 0, 0.2, 0.5); rows missing keys: "
+             f"{bad}; zero-fault overhead > 1.05x of the plain round: "
+             f"{slow}. Run `python -m benchmarks.run --only faults` and "
+             f"commit.")
+print(f"  ok: {len(fau)} fault rows, K={sorted(ks)}, zero-fault overhead "
+      f"{max(r['fault_overhead'] for r in fau if r['dropout'] == 0.0):.3f}x")
 EOF
 
-echo "== reconstruction + fused + bwd + wire + downlink benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink
+echo "== reconstruction + fused + bwd + wire + downlink + fault benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -146,4 +168,8 @@ for r in rows:
               f"{r['us']/1e3:8.1f}ms  "
               f"down={r['downlink_bytes_per_client']:>10}B "
               f"({r['downlink_vs_f32']:.4f}x f32)")
+    elif r.get("bench") == "fault_round":
+        print(f"  fault dropout={r['dropout']:<4} K={r['K']:>3}: "
+              f"{r['us']/1e3:8.1f}ms vs plain {r['plain_us']/1e3:8.1f}ms "
+              f"({r['fault_overhead']:.3f}x)")
 EOF

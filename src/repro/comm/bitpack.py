@@ -65,3 +65,28 @@ def packed_popcount_sum(packed, n: int):
     bits = (packed[:, :, None] >> _shifts()) & jnp.uint32(1)  # (K, L, 32)
     counts = jnp.sum(bits, axis=0, dtype=jnp.uint32)  # (L, 32)
     return counts.reshape(-1)[:n]
+
+
+def packed_weighted_sum(packed, n: int, weights):
+    """Weighted per-coordinate vote counts — the partial-participation
+    generalization of ``packed_popcount_sum``.
+
+    ``packed``: (K, ceil(n/32)) uint32; ``weights``: (K,) uint32 —
+    participation bits and sample counts enter the sum as exact integer
+    multiplies, so the result is exact whenever ``sum(weights) < 2^32``
+    (a weight-0 client contributes nothing).  With ``weights`` all ones
+    the multiply is the u32 identity: bit-identical to
+    ``packed_popcount_sum``.
+    """
+    bits = (packed[:, :, None] >> _shifts()) & jnp.uint32(1)  # (K, L, 32)
+    w = weights.astype(jnp.uint32)[:, None, None]
+    counts = jnp.sum(bits * w, axis=0, dtype=jnp.uint32)  # (L, 32)
+    return counts.reshape(-1)[:n]
+
+
+def packed_total_popcount(packed):
+    """Total set bits over the trailing lane axis (leading batch axes
+    kept) -> uint32.  The per-tensor upload checksum of the fault
+    layer's server-side validation (``fault.validate``)."""
+    bits = (packed[..., :, None] >> _shifts()) & jnp.uint32(1)
+    return jnp.sum(bits, axis=(-1, -2), dtype=jnp.uint32)

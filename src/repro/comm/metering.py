@@ -90,6 +90,34 @@ def round_wire_report(zspecs, aggregate: str, num_clients: int,
     }
 
 
+def realized_wire_metrics(report: Dict[str, float], uplink_units,
+                          cohort_size: int) -> Dict:
+    """Scale a round's exact per-client byte counts by the REALIZED
+    traffic of a partial-participation round (the fault-tolerant
+    drivers in ``core.federated``).
+
+    ``uplink_units``: how many client uploads actually crossed the
+    uplink — arrivals (including corrupt uploads, whose bytes are spent
+    before validation rejects them) plus one extra copy per duplicate;
+    may be a traced scalar, in which case the round totals are traced
+    too.  Dropped and straggler clients never hit the wire (a missed
+    cutoff means the server stopped listening), so their bytes are NOT
+    counted.  ``cohort_size``: every sampled client receives the
+    broadcast at round start, downloads included, whatever happens to
+    its upload.  Per-client figures stay the static protocol constants.
+    """
+    return {
+        "uplink_bytes_per_client": report["uplink_bytes_per_client"],
+        "uplink_bytes_round":
+            report["uplink_bytes_per_client"] * uplink_units,
+        "downlink_bytes_per_client": report["downlink_bytes_per_client"],
+        "downlink_bytes_round":
+            report["downlink_bytes_per_client"] * float(cohort_size),
+        "naive_uplink_bytes_per_client":
+            report["naive_uplink_bytes_per_client"],
+    }
+
+
 def wire_table(zspecs, num_clients: int, downlink: str = "f32") -> List[Dict]:
     """One row per registered uplink strategy (at the given downlink
     codec) — the measured-bytes table for ``experiments.paper`` and the
@@ -135,5 +163,6 @@ def downlink_table(zspecs, num_clients: int,
 
 __all__ = [
     "mask_uplink_bytes", "score_downlink_bytes", "round_wire_report",
-    "wire_table", "downlink_table", "get_transport", "get_codec",
+    "realized_wire_metrics", "wire_table", "downlink_table",
+    "get_transport", "get_codec",
 ]

@@ -22,6 +22,18 @@ the same final ``counts / K`` f32 division.  Strategies assume BINARY
 masks; ``resolve_transport`` falls back to ``mean_f32`` for continuous
 (probability-valued) uploads, which cannot be bitpacked.
 
+Partial participation (the fault-tolerant round, ``repro.fault``):
+every strategy also exposes WEIGHTED variants that return the
+UNNORMALIZED weighted sum ``sum_k w_k z^(k)`` — participation bits
+{0,1} and per-client sample counts enter the reduction as exact uint32
+multiplies on the packed strategies (exact while ``sum(w) < 2^32``)
+and as exact f32 multiplies on ``mean_f32`` (binary z times an integer
+weight below 2^24).  The caller normalizes by the REALIZED weight sum
+(``core.federated``), so a dropped / corrupt client (weight 0)
+contributes nothing and the mean stays exact over the survivors.  With
+all weights 1 the multiplies are identities: the weighted reduction is
+bit-identical to the unweighted one.
+
 Each strategy exposes both execution paths of the federated round:
 ``aggregate_stacked`` for the vmap simulation (a stacked (K, n) slab on
 one host) and ``aggregate_collective`` for the ``shard_map`` production
@@ -36,7 +48,13 @@ from typing import Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .bitpack import pack_mask, packed_len, packed_popcount_sum, unpack_mask
+from .bitpack import (
+    pack_mask,
+    packed_len,
+    packed_popcount_sum,
+    packed_weighted_sum,
+    unpack_mask,
+)
 from .shardmap import axis_size
 
 
@@ -81,6 +99,34 @@ class Transport:
             f"transport {self.name!r} does not take packed lanes"
         )
 
+    # ---- weighted (partial-participation) variants: UNNORMALIZED
+    # sums; the round driver divides by the realized weight sum
+
+    def aggregate_stacked_weighted(self, Z, weights):
+        """(K, n) masks x (K,) uint32 weights -> (n,) f32 weighted sum."""
+        raise NotImplementedError
+
+    def aggregate_collective_weighted(self, z, weight,
+                                      axis_names: Sequence[str]):
+        """Per-client (n,) mask x scalar uint32 weight -> replicated
+        (n,) f32 weighted sum over ``axis_names``."""
+        raise NotImplementedError
+
+    def aggregate_stacked_packed_weighted(self, lanes, n: int, weights):
+        """(K, L) lanes x (K,) uint32 weights -> (n,) uint32 weighted
+        vote counts (exact while sum(weights) < 2^32)."""
+        raise NotImplementedError(
+            f"transport {self.name!r} does not take packed lanes"
+        )
+
+    def aggregate_collective_packed_weighted(self, lanes, n: int, weight,
+                                             axis_names: Sequence[str]):
+        """Per-client (L,) lanes x scalar uint32 weight -> replicated
+        (n,) uint32 weighted vote counts."""
+        raise NotImplementedError(
+            f"transport {self.name!r} does not take packed lanes"
+        )
+
 
 class MeanF32(Transport):
     """Baseline: f32 masks, float psum — 32 bits/coordinate uplink."""
@@ -96,6 +142,18 @@ class MeanF32(Transport):
     def aggregate_collective(self, z, axis_names):
         names = tuple(axis_names)
         return jax.lax.psum(z.astype(jnp.float32), names) / axis_size(names)
+
+    def aggregate_stacked_weighted(self, Z, weights):
+        # z * w is exact (binary z, integer w < 2^24 in f32), and at
+        # w == 1 the multiply is the identity: bit-identical sum
+        w = weights.astype(jnp.float32)[:, None]
+        return jnp.sum(Z.astype(jnp.float32) * w, axis=0)
+
+    def aggregate_collective_weighted(self, z, weight, axis_names):
+        names = tuple(axis_names)
+        return jax.lax.psum(
+            z.astype(jnp.float32) * weight.astype(jnp.float32), names
+        )
 
 
 def _popcount_mean(Z):
@@ -145,6 +203,15 @@ class PsumU32(Transport):
         counts = jax.lax.psum(bits, names)
         return counts.astype(jnp.float32) / axis_size(names)
 
+    def aggregate_stacked_packed_weighted(self, lanes, n, weights):
+        return packed_weighted_sum(lanes, n, weights)
+
+    def aggregate_collective_packed_weighted(self, lanes, n, weight,
+                                             axis_names):
+        names = tuple(axis_names)
+        bits = unpack_mask(lanes, n, dtype=jnp.uint32)
+        return jax.lax.psum(bits * weight.astype(jnp.uint32), names)
+
 
 class AllgatherPacked(Transport):
     """Bitpacked wire, raw lanes all-gathered; server-side unpack."""
@@ -172,6 +239,20 @@ class AllgatherPacked(Transport):
         gathered = jax.lax.all_gather(lanes, names, axis=0)  # (K, L)
         counts = packed_popcount_sum(gathered.reshape(k, -1), n)
         return counts.astype(jnp.float32) / k
+
+    def aggregate_stacked_packed_weighted(self, lanes, n, weights):
+        return packed_weighted_sum(lanes, n, weights)
+
+    def aggregate_collective_packed_weighted(self, lanes, n, weight,
+                                             axis_names):
+        # gather raw lanes AND weights: the server sees every upload
+        # with its weight and reduces exactly as the stacked path does
+        names = tuple(axis_names)
+        k = axis_size(names)
+        gathered = jax.lax.all_gather(lanes, names, axis=0)  # (K, L)
+        w = jax.lax.all_gather(weight.astype(jnp.uint32), names, axis=0)
+        return packed_weighted_sum(gathered.reshape(k, -1), n,
+                                   w.reshape(k))
 
 
 _REGISTRY: Dict[str, Transport] = {}

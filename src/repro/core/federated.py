@@ -57,6 +57,37 @@ widened-threshold integer compare and never materialize a dequantized
 f32 score slab.  ``encode_state`` converts an f32 init state into the
 configured wire representation before the first round.
 
+PARTIAL PARTICIPATION (the fault-tolerant round, ``repro.fault``):
+the full-participation round above is the special case every client
+shows up.  Passing ``client_ids`` / ``weights`` / ``faults`` to either
+driver switches the server update to the weighted partial form
+
+    p(t+1) = sum_k w_k·b_k·z^(k) / sum_k w_k·b_k,
+
+where ``w_k`` is client k's sample-count weight (``fault.population
+.ClientPopulation``, e.g. Dirichlet split sizes) and ``b_k ∈ {0,1}``
+is its REALIZED participation bit: 0 if the client dropped, straggled
+past the round cutoff, or failed the server's upload validation
+(``fault.validate`` popcount checksums detect the lane corruption
+``FaultPlan`` injects).  Both factors enter the popcount reduction as
+exact uint32 multiplies (``comm.protocol`` ``*_weighted``), so the
+mean over the survivors is EXACT — the same integers in every wire
+representation — and the realized denominator replaces the configured
+K (the divide-by-K mean is silently wrong the moment anyone drops).
+A round whose surviving cohort falls below ``FederatedConfig
+.min_clients`` (or whose realized weight is zero) is SKIPPED: the
+carried state — scores in the downlink codec's wire words, dense
+leaves — passes through unchanged and the metrics flag
+``round_skipped=1``; averaging two survivors of a hundred would move
+p(t) by sampling noise, not signal.  With all clients participating
+at weight 1 every multiply is an identity and the weighted round is
+bit-identical to the plain protocol (tests/test_faults.py); with no
+participation arguments at all the plain code path runs, untouched.
+Metrics gain the realized-cohort counters (``PARTICIPATION_METRIC_
+KEYS``) and ``comm.metering.realized_wire_metrics`` replaces the
+configured byte totals with realized ones (corrupt uploads still
+spend uplink bytes; duplicates spend them twice; drops spend none).
+
 Two execution paths with identical math AND identical draws (the
 per-client draw words coincide, so the two paths produce bit-identical
 scores for the same key/round_index):
@@ -86,7 +117,7 @@ import jax
 import jax.numpy as jnp
 
 from ..comm.downlink import codec_names, get_codec
-from ..comm.metering import round_wire_report
+from ..comm.metering import realized_wire_metrics, round_wire_report
 from ..comm.protocol import resolve_transport, transport_names
 from ..optim import Optimizer, sgd
 from .sampling import as_word, fold_word
@@ -111,8 +142,16 @@ class FederatedConfig:
     aggregate: str = "mean"  # a registered comm.protocol transport name
     mask_path: str = "fused"  # fused | composed (the bit-exact oracle)
     downlink: str = "f32"  # a registered comm.downlink codec name
+    # partial participation: a round whose SURVIVING cohort (arrived
+    # AND validated) is smaller than this is skipped — state carried
+    # forward unchanged, metrics flag round_skipped
+    min_clients: int = 1
 
     def __post_init__(self):
+        if self.min_clients < 1:
+            raise ValueError(
+                f"min_clients must be >= 1, got {self.min_clients}"
+            )
         if self.aggregate not in transport_names():
             raise ValueError(
                 f"unknown aggregate strategy {self.aggregate!r}; "
@@ -266,20 +305,57 @@ WIRE_METRIC_KEYS = (
     "naive_uplink_bytes_per_client",
 )
 
+# realized-cohort counters (partial participation; repro.fault) — the
+# plain full-participation round reports them too (all clients
+# participating, nothing skipped), so EVERY round's metrics dict has
+# the identical key set and shard_map out_specs never depend on the
+# participation arguments
+PARTICIPATION_METRIC_KEYS = (
+    "cohort_size",
+    "num_participating",
+    "num_dropped",
+    "num_stragglers",
+    "num_corrupt",
+    "num_duplicates",
+    "weight_sum",
+    "round_skipped",
+)
+
+# THE key set of a round's metrics dict: size shard_map out_specs from
+# this (tests/_helpers.round_metric_specs, launch.dryrun), never from
+# a hardcoded subset
+ROUND_METRIC_KEYS = ("loss",) + WIRE_METRIC_KEYS + PARTICIPATION_METRIC_KEYS
+
 
 def _wire_metrics(zspecs: ZamplingSpecs, cfg: FederatedConfig,
-                  num_clients: Optional[int] = None):
+                  num_clients: int):
     """Exact byte counts for this round's traffic (static per config).
 
-    ``num_clients`` overrides ``cfg.num_clients`` on the sharded path,
-    where the true client count is the mesh axis size.
+    ``num_clients`` is the round's REALIZED cohort size — the stacked
+    batch's leading axis on the vmap path, the mesh axis size on the
+    sharded path — never ``cfg.num_clients``, which only names the
+    default population size.
     """
     rep = round_wire_report(
-        zspecs, cfg.aggregate,
-        cfg.num_clients if num_clients is None else num_clients,
+        zspecs, cfg.aggregate, num_clients,
         mode=cfg.mode, downlink=cfg.downlink,
     )
     return {k: rep[k] for k in WIRE_METRIC_KEYS}
+
+
+def _full_participation_metrics(k: int):
+    """The participation counters of a plain full-participation round:
+    everyone sampled, everyone weight 1, nothing faulted or skipped."""
+    return {
+        "cohort_size": float(k),
+        "num_participating": float(k),
+        "num_dropped": 0.0,
+        "num_stragglers": 0.0,
+        "num_corrupt": 0.0,
+        "num_duplicates": 0.0,
+        "weight_sum": float(k),
+        "round_skipped": 0.0,
+    }
 
 
 def _encode_scores(zspecs: ZamplingSpecs, cfg: FederatedConfig,
@@ -313,6 +389,58 @@ def _aggregate_stacked(zspecs, transport, packed, z_all):
     return {p: transport.aggregate_stacked(z) for p, z in z_all.items()}
 
 
+def _resolve_faults(zspecs, packed, z_all, faults, round_index, ids):
+    """Shared per-upload fault pipeline of both drivers.
+
+    ``z_all``/``ids`` carry a (K,) client axis on the vmap path and are
+    per-shard (no client axis) under shard_map — the draws key on the
+    CLIENT ID either way, so the scenarios coincide bit-for-bit.
+    Returns (z_wire, codes, arrived, participating): the uploads as
+    the server RECEIVES them (corruption applied), the per-client
+    fault codes, the arrival bits (bytes on the wire), and
+    ``arrived & validated`` (counted in the aggregate).
+    """
+    # late import: core.federated is imported by repro.core's __init__,
+    # while repro.fault imports core.hashrng — binding at trace time
+    # keeps the package import order acyclic in both directions
+    from ..fault.plan import CORRUPT, DROP, STRAGGLER, corrupt_uploads, draw_faults
+    from ..fault.validate import upload_counts, validate_uploads
+
+    declared = upload_counts(z_all, zspecs, packed)
+    if faults is not None:
+        codes = draw_faults(faults, round_index, ids)
+        z_wire = corrupt_uploads(faults, z_all, declared, codes == CORRUPT,
+                                 round_index, ids, zspecs, packed)
+    else:
+        codes = jnp.zeros(jnp.shape(ids), jnp.uint32)
+        z_wire = z_all
+    arrived = (codes != DROP) & (codes != STRAGGLER)
+    # server-side validation runs on the RECEIVED payload — the genuine
+    # check, not a read-back of the injector's corrupt flag
+    valid = validate_uploads(z_wire, declared, zspecs, packed)
+    return z_wire, codes, arrived, arrived & valid
+
+
+def _fault_counts(codes, arrived, participating):
+    """Realized-cohort counters from per-client fault state (f32)."""
+    from ..fault.plan import DROP, DUPLICATE, STRAGGLER
+
+    def cnt(mask):
+        return jnp.sum(mask.astype(jnp.float32))
+
+    dup = cnt(codes == DUPLICATE)
+    return {
+        "num_participating": cnt(participating),
+        "num_dropped": cnt(codes == DROP),
+        "num_stragglers": cnt(codes == STRAGGLER),
+        "num_corrupt": cnt(arrived & ~participating),
+        "num_duplicates": dup,
+        # arrivals spend uplink bytes even when validation rejects
+        # them; each duplicate upload arrives twice
+        "uplink_units": cnt(arrived) + dup,
+    }
+
+
 def federated_round(
     zspecs: ZamplingSpecs,
     state: Dict[str, Any],
@@ -323,34 +451,117 @@ def federated_round(
     opt: Optional[Optimizer] = None,
     *,
     round_index=0,
+    client_ids=None,  # (K,) uint32 cohort ids; None = arange(K)
+    weights=None,  # (K,) uint32 sample-count weights; None = all ones
+    faults: Optional["FaultPlan"] = None,  # noqa: F821 — repro.fault
 ):
     """Full round over K stacked clients (vmap). Returns (state', metrics).
 
     ``round_index``: the round counter folded into every draw word
     (threaded by ``train.fit.federated_fit``'s scan); client k draws
-    from word ``hash(key_word(key), round_index, k)``.
+    from word ``hash(key_word(key), round_index, client_id_k)``.
+
+    ``client_ids`` / ``weights`` / ``faults`` switch on the
+    partial-participation path (weighted aggregation over the realized
+    cohort, skip below ``cfg.min_clients``; see the module docstring).
+    With all three None the plain full-participation protocol runs —
+    the exact PR-5 code path, bit for bit.  K is the stacked batch's
+    leading axis; ``cfg.num_clients`` only names the default
+    population.
     """
     transport = resolve_transport(cfg.aggregate, cfg.mode)
     packed = mask_program(zspecs, cfg).packed
+    k = jax.tree.leaves(client_batches)[0].shape[0]
+    participation = (client_ids is not None or weights is not None
+                     or faults is not None)
+    ids = (jnp.arange(k, dtype=jnp.uint32) if client_ids is None
+           else jnp.asarray(client_ids).astype(jnp.uint32))
     words = fold_word(
-        as_word(key), jnp.asarray(round_index).astype(jnp.uint32),
-        jnp.arange(cfg.num_clients, dtype=jnp.uint32),
+        as_word(key), jnp.asarray(round_index).astype(jnp.uint32), ids,
     )
 
     def one(batches, w):
         return local_update(zspecs, state, loss_fn, batches, w, cfg, opt)
 
     z_all, dense_all, losses = jax.vmap(one)(client_batches, words)
-    # server aggregation: p(t+1) = mean_k z^(k), via the wire transport,
-    # re-encoded as the next broadcast (cfg.downlink's wire words)
-    new_scores = _encode_scores(
-        zspecs, cfg, _aggregate_stacked(zspecs, transport, packed, z_all),
-        key, round_index,
+
+    if not participation:
+        # server aggregation: p(t+1) = mean_k z^(k), via the wire
+        # transport, re-encoded as the next broadcast (cfg.downlink's
+        # wire words)
+        new_scores = _encode_scores(
+            zspecs, cfg,
+            _aggregate_stacked(zspecs, transport, packed, z_all),
+            key, round_index,
+        )
+        new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
+        metrics = {"loss": jnp.mean(losses),
+                   **_wire_metrics(zspecs, cfg, k),
+                   **_full_participation_metrics(k)}
+        return {"scores": new_scores, "dense": new_dense}, metrics
+
+    # ---- partial participation: faults -> validation -> weighted mean
+    z_wire, codes, arrived, participating = _resolve_faults(
+        zspecs, packed, z_all, faults, round_index, ids)
+    w = (jnp.ones((k,), jnp.uint32) if weights is None
+         else jnp.asarray(weights).astype(jnp.uint32))
+    w_eff = w * participating.astype(jnp.uint32)
+    wsum = jnp.sum(w_eff, dtype=jnp.uint32).astype(jnp.float32)
+    safe_wsum = jnp.where(wsum > 0, wsum, jnp.float32(1))
+    # RECIPROCAL form everywhere below, never `x / safe_wsum`: XLA
+    # strength-reduces the legacy path's divisions by a CONSTANT count
+    # (aggregate_stacked's `/ K`, jnp.mean, psum / axis_size) into a
+    # reciprocal multiply, and a runtime `x * (1/w)` reproduces that
+    # bit for bit at any K while a true division drifts by an ulp
+    # whenever the weight sum is not a power of two
+    recip = jnp.float32(1.0) / safe_wsum
+    if packed:
+        agg = {
+            p: transport.aggregate_stacked_packed_weighted(
+                z_wire[p], zspecs.specs[p].n, w_eff
+            ).astype(jnp.float32) * recip
+            for p in z_wire
+        }
+    else:
+        agg = {
+            p: transport.aggregate_stacked_weighted(z, w_eff) * recip
+            for p, z in z_wire.items()
+        }
+    counters = _fault_counts(codes, arrived, participating)
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    w_f = w_eff.astype(jnp.float32)
+
+    def dense_mean(d):
+        wcol = w_f.reshape((k,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d * wcol, axis=0) * recip
+
+    new_dense_agg = jax.tree.map(dense_mean, dense_all)
+    # skip-round: below min_clients the carried state passes through
+    # unchanged (averaging a near-empty cohort is sampling noise)
+    skip = counters["num_participating"] < cfg.min_clients
+    new_scores = {
+        p: jnp.where(skip, state["scores"][p], new_enc[p])
+        for p in new_enc
+    }
+    new_dense = jax.tree.map(
+        lambda old, new: jnp.where(skip, old, new),
+        dict(state["dense"]), new_dense_agg,
     )
-    new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
-    new_state = {"scores": new_scores, "dense": new_dense}
-    metrics = {"loss": jnp.mean(losses), **_wire_metrics(zspecs, cfg)}
-    return new_state, metrics
+    part_f = participating.astype(jnp.float32)
+    cnt = counters["num_participating"]
+    safe_cnt = jnp.where(cnt > 0, cnt, jnp.float32(1))
+    loss = jnp.sum(losses * part_f) * (jnp.float32(1.0) / safe_cnt)
+    uplink_units = counters.pop("uplink_units")
+    metrics = {
+        "loss": loss,
+        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k),
+                                uplink_units, k),
+        "cohort_size": float(k),
+        **counters,
+        "weight_sum": wsum,
+        "round_skipped": skip.astype(jnp.float32),
+    }
+    return {"scores": new_scores, "dense": new_dense}, metrics
 
 
 def sharded_client_update(
@@ -366,6 +577,9 @@ def sharded_client_update(
     constraints=None,
     row_sharding=None,
     round_index=0,
+    client_id=None,  # this shard's global client id; None = axis index
+    weight=None,  # this shard's uint32 sample-count weight; None = 1
+    faults: Optional["FaultPlan"] = None,  # noqa: F821 — repro.fault
 ):
     """Body to run under ``shard_map``: client id = mesh position.
 
@@ -378,48 +592,126 @@ def sharded_client_update(
     emitted — no f32 mask slab exists on this path at all.  The draw
     words match ``federated_round``'s (client id = axis index), so the
     two paths are bit-identical for the same key/round_index.
+
+    ``client_id`` / ``weight`` / ``faults`` switch on the
+    partial-participation path — fault draws, upload validation, and
+    the weighted psum key on the GLOBAL client id (per-shard scalars
+    here), so a scenario replays bit-identically against the vmap
+    driver run over the same cohort.
     """
     from ..comm.shardmap import axis_size
 
     transport = resolve_transport(cfg.aggregate, cfg.mode)
     packed = mask_program(zspecs, cfg).packed
+    participation = (client_id is not None or weight is not None
+                     or faults is not None)
     idx = sum(
         jax.lax.axis_index(a) * 1_000_003 ** i for i, a in enumerate(axis_names)
     )
+    my_id = (jnp.asarray(idx) if client_id is None
+             else jnp.asarray(client_id)).astype(jnp.uint32)
     word = fold_word(
-        as_word(key), jnp.asarray(round_index).astype(jnp.uint32),
-        jnp.asarray(idx).astype(jnp.uint32),
+        as_word(key), jnp.asarray(round_index).astype(jnp.uint32), my_id,
     )
     z_new, dense_new, loss = local_update(
         zspecs, state, loss_fn, batches, word, cfg, opt,
         constraints=constraints, row_sharding=row_sharding,
     )
     nclients = axis_size(axis_names)
+
+    if not participation:
+        if packed:
+            new_scores = {
+                p: transport.aggregate_collective_packed(
+                    z, zspecs.specs[p].n, axis_names
+                )
+                for p, z in z_new.items()
+            }
+        else:
+            new_scores = {
+                p: transport.aggregate_collective(z, axis_names)
+                for p, z in z_new.items()
+            }
+        # re-encode the replicated aggregate as the next broadcast: the
+        # dither word comes from the replicated (key, round_index), so
+        # all shards produce the identical encoding — bit-equal to the
+        # vmap path
+        new_scores = _encode_scores(zspecs, cfg, new_scores, key,
+                                    round_index)
+        # dense leaves stay on the f32 psum path: XLA:CPU's
+        # AllReducePromotion pass aborts on bf16 all-reduces (and f32
+        # is the numerically right accumulator anyway)
+        new_dense = jax.tree.map(
+            lambda d: (jax.lax.psum(d.astype(jnp.float32), axis_names)
+                       / nclients).astype(d.dtype),
+            dense_new,
+        )
+        loss = jax.lax.pmean(loss, axis_names)
+        # the mesh axis size, not cfg.num_clients, is the real K here
+        metrics = {"loss": loss, **_wire_metrics(zspecs, cfg, nclients),
+                   **_full_participation_metrics(nclients)}
+        return {"scores": new_scores, "dense": new_dense}, metrics
+
+    # ---- partial participation: every per-client quantity is a
+    # per-shard scalar; the psums realize the weighted server sum
+    z_wire, code, arrived, participating = _resolve_faults(
+        zspecs, packed, z_new, faults, round_index, my_id)
+    w = (jnp.uint32(1) if weight is None
+         else jnp.asarray(weight).astype(jnp.uint32))
+    w_eff = w * participating.astype(jnp.uint32)
+    wsum = jax.lax.psum(w_eff, tuple(axis_names)).astype(jnp.float32)
+    safe_wsum = jnp.where(wsum > 0, wsum, jnp.float32(1))
+    # reciprocal form, matching the vmap driver and the legacy path's
+    # constant divisions after XLA's strength reduction — see
+    # federated_round's participation branch
+    recip = jnp.float32(1.0) / safe_wsum
     if packed:
-        new_scores = {
-            p: transport.aggregate_collective_packed(
-                z, zspecs.specs[p].n, axis_names
-            )
-            for p, z in z_new.items()
+        agg = {
+            p: transport.aggregate_collective_packed_weighted(
+                z, zspecs.specs[p].n, w_eff, axis_names
+            ).astype(jnp.float32) * recip
+            for p, z in z_wire.items()
         }
     else:
-        new_scores = {
-            p: transport.aggregate_collective(z, axis_names)
-            for p, z in z_new.items()
+        agg = {
+            p: transport.aggregate_collective_weighted(
+                z, w_eff, axis_names
+            ) * recip
+            for p, z in z_wire.items()
         }
-    # re-encode the replicated aggregate as the next broadcast: the
-    # dither word comes from the replicated (key, round_index), so all
-    # shards produce the identical encoding — bit-equal to the vmap path
-    new_scores = _encode_scores(zspecs, cfg, new_scores, key, round_index)
-    # dense leaves stay on the f32 psum path: XLA:CPU's
-    # AllReducePromotion pass aborts on bf16 all-reduces (and f32 is
-    # the numerically right accumulator anyway)
-    new_dense = jax.tree.map(
-        lambda d: (jax.lax.psum(d.astype(jnp.float32), axis_names)
-                   / nclients).astype(d.dtype),
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    counters = {
+        k: jax.lax.psum(v, tuple(axis_names))
+        for k, v in _fault_counts(code, arrived, participating).items()
+    }
+    w_f = w_eff.astype(jnp.float32)
+    new_dense_agg = jax.tree.map(
+        lambda d: (jax.lax.psum(d.astype(jnp.float32) * w_f, axis_names)
+                   * recip).astype(d.dtype),
         dense_new,
     )
-    loss = jax.lax.pmean(loss, axis_names)
-    # the mesh axis size, not cfg.num_clients, is the real K here
-    metrics = {"loss": loss, **_wire_metrics(zspecs, cfg, nclients)}
+    skip = counters["num_participating"] < cfg.min_clients
+    new_scores = {
+        p: jnp.where(skip, state["scores"][p], new_enc[p])
+        for p in new_enc
+    }
+    new_dense = jax.tree.map(
+        lambda old, new: jnp.where(skip, old, new),
+        dict(state["dense"]), new_dense_agg,
+    )
+    cnt = counters["num_participating"]
+    safe_cnt = jnp.where(cnt > 0, cnt, jnp.float32(1))
+    loss = jax.lax.psum(
+        loss * participating.astype(jnp.float32), tuple(axis_names)
+    ) * (jnp.float32(1.0) / safe_cnt)
+    uplink_units = counters.pop("uplink_units")
+    metrics = {
+        "loss": loss,
+        **realized_wire_metrics(_wire_metrics(zspecs, cfg, nclients),
+                                uplink_units, nclients),
+        "cohort_size": float(nclients),
+        **counters,
+        "weight_sum": wsum,
+        "round_skipped": skip.astype(jnp.float32),
+    }
     return {"scores": new_scores, "dense": new_dense}, metrics

@@ -53,6 +53,13 @@ MASK_CTR = 0x0008_0000
 # deterministic round-to-nearest would reintroduce).
 QUANT_DITHER_CTR = 0x0010_0000
 
+# Further counter spaces of the hash stream live with their consumers
+# but share this registry discipline (each CTR word keeps its stream
+# disjoint from all others):
+#   COHORT_CTR  = 0x0020_0000  fault.population — K-of-N cohort draws
+#   FAULT_CTR   = 0x0028_0000  fault.plan — per-(round, client) faults
+#   CORRUPT_CTR = 0x0030_0000  fault.plan — lane-corruption garbage
+
 
 def clip_probs(s):
     """p = f(s), the ReLU clipped at 1. Gradient is 1_{0<=s<=1}."""

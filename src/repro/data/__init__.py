@@ -1,7 +1,13 @@
 from .synthetic import SyntheticClassification, lm_token_batches, make_teacher_dataset
-from .federated_split import iid_client_split, client_batch_stream
+from .federated_split import (
+    client_batch_stream,
+    cohort_batch_stream,
+    dirichlet_client_split,
+    iid_client_split,
+)
 
 __all__ = [
     "SyntheticClassification", "lm_token_batches", "make_teacher_dataset",
-    "iid_client_split", "client_batch_stream",
+    "iid_client_split", "dirichlet_client_split", "client_batch_stream",
+    "cohort_batch_stream",
 ]

@@ -1,4 +1,9 @@
-"""IID client partitioning (the paper assumes IID splits, §1.3)."""
+"""Client partitioning: IID (the paper's §1.3 assumption) and
+Dirichlet-β non-IID (the production regime the fault-tolerant round
+engine targets — fedPrune-style ``--total-clients N`` populations with
+heterogeneous label mixes and UNEQUAL per-client dataset sizes, the
+sample-count weights of the weighted aggregation in
+``core.federated``)."""
 
 from __future__ import annotations
 
@@ -23,6 +28,57 @@ def iid_client_split(ds: SyntheticClassification, num_clients: int,
     ]
 
 
+def dirichlet_client_split(
+    ds: SyntheticClassification,
+    num_clients: int,
+    beta: float = 0.5,
+    seed: int = 0,
+) -> Tuple[List[SyntheticClassification], np.ndarray]:
+    """Dirichlet-β non-IID split with per-client label histograms.
+
+    For every class c, a draw ``q ~ Dir(beta 1_K)`` apportions that
+    class's examples across the K clients — small β concentrates each
+    class on few clients (pathological non-IID), large β approaches
+    IID.  Returns ``(clients, hist)`` where ``hist`` is the (K, C)
+    label-count matrix; ``hist.sum(axis=1)`` are the per-client sample
+    counts that ``fault.population.ClientPopulation`` takes as the
+    aggregation weights of the partial-participation round.  Every
+    client is guaranteed at least one example (a weight-0 client could
+    never contribute): empty clients steal one example from the
+    largest.
+    """
+    if beta <= 0:
+        raise ValueError(f"beta must be > 0, got {beta}")
+    rng = np.random.RandomState(seed)
+    y = np.asarray(ds.y_train)
+    classes = np.unique(y)
+    shards: List[List[np.ndarray]] = [[] for _ in range(num_clients)]
+    for c in classes:
+        idx = rng.permutation(np.flatnonzero(y == c))
+        q = rng.dirichlet(np.full(num_clients, beta))
+        # proportions -> contiguous slices of the shuffled class pool
+        cuts = (np.cumsum(q)[:-1] * len(idx)).astype(np.int64)
+        for k, part in enumerate(np.split(idx, cuts)):
+            shards[k].append(part)
+    owned = [np.concatenate(s) if s else np.empty(0, np.int64)
+             for s in shards]
+    for k in range(num_clients):
+        while len(owned[k]) == 0:
+            donor = int(np.argmax([len(o) for o in owned]))
+            owned[k] = owned[donor][-1:]
+            owned[donor] = owned[donor][:-1]
+    hist = np.zeros((num_clients, len(classes)), np.int64)
+    clients = []
+    for k, s in enumerate(owned):
+        s = rng.permutation(s)
+        for j, c in enumerate(classes):
+            hist[k, j] = int(np.sum(y[s] == c))
+        clients.append(SyntheticClassification(
+            ds.x_train[s], ds.y_train[s], ds.x_test, ds.y_test
+        ))
+    return clients, hist
+
+
 def client_batch_stream(
     clients: List[SyntheticClassification],
     batch_size: int,
@@ -39,3 +95,40 @@ def client_batch_stream(
             xs.append(c.x_train[idx])
             ys.append(c.y_train[idx])
         yield np.stack(xs), np.stack(ys)
+
+
+def cohort_batch_stream(
+    clients: List[SyntheticClassification],
+    population,  # fault.population.ClientPopulation over these clients
+    cohort_size: int,
+    batch_size: int,
+    local_steps: int,
+    seed: int = 0,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Host-side data staging for partial-participation rounds.
+
+    Round r replays the SAME K-of-N cohort draw the traced round
+    derives from the hash stream (``ClientPopulation.cohort_np`` —
+    pure in (population.seed, r)) and stages batches for exactly those
+    K clients.  Yields ``(client_ids, weights, x, y)`` per round with
+    x/y stacked (cohort_size, local_steps, batch_size, ...) — feed ids
+    and weights straight into ``federated_round`` / ``federated_fit``
+    so the draw words key on the GLOBAL client ids.
+    """
+    if len(clients) != population.num_clients:
+        raise ValueError(
+            f"{len(clients)} client datasets for a population of "
+            f"{population.num_clients}"
+        )
+    rng = np.random.RandomState(seed)
+    r = 0
+    while True:
+        ids, weights = population.cohort_np(r, cohort_size)
+        xs, ys = [], []
+        for cid in ids:
+            c = clients[int(cid)]
+            idx = rng.randint(0, len(c.x_train), (local_steps, batch_size))
+            xs.append(c.x_train[idx])
+            ys.append(c.y_train[idx])
+        yield ids, weights, np.stack(xs), np.stack(ys)
+        r += 1

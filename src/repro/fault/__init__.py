@@ -1,0 +1,43 @@
+"""Fault-tolerant partial participation for the federated round.
+
+Three pieces, all keyed by the counter-based hash RNG so every
+scenario is a pure function of integers (deterministic, replayable,
+bit-identical across the vmap and shard_map drivers):
+
+ - ``population``  ``ClientPopulation`` — N virtual clients with
+   sample-count weights and the K-of-N cohort draw at COHORT_CTR;
+ - ``plan``        ``FaultPlan`` — drop / straggler / corrupt /
+   duplicate faults drawn per (round, client) at FAULT_CTR, with
+   guaranteed-detectable lane corruption injected at CORRUPT_CTR;
+ - ``validate``    server-side upload validation — per-tensor popcount
+   checksums that exclude damaged uploads from the weighted aggregate.
+
+The aggregation itself (participation bits and weights as exact uint32
+multiplies inside the popcount sum, realized-weight normalization,
+skip-round below ``FederatedConfig.min_clients``) lives in
+``core.federated`` + ``comm.protocol``.
+"""
+
+from .plan import (
+    CORRUPT,
+    CORRUPT_CTR,
+    DROP,
+    DUPLICATE,
+    FAULT_CTR,
+    FAULT_NAMES,
+    OK,
+    STRAGGLER,
+    FaultPlan,
+    corrupt_uploads,
+    draw_faults,
+)
+from .population import COHORT_CTR, ClientPopulation
+from .validate import upload_counts, validate_uploads
+
+__all__ = [
+    "ClientPopulation", "COHORT_CTR",
+    "FaultPlan", "FAULT_CTR", "CORRUPT_CTR", "FAULT_NAMES",
+    "OK", "DROP", "STRAGGLER", "CORRUPT", "DUPLICATE",
+    "draw_faults", "corrupt_uploads",
+    "upload_counts", "validate_uploads",
+]

@@ -1,0 +1,160 @@
+"""Deterministic fault injection on the integer wire.
+
+A ``FaultPlan`` is a static description of an unreliable deployment:
+per (round, client), one of four faults may strike the client's
+participation in the round —
+
+ - **drop**       the client vanishes before uploading (no bytes
+   reach the server);
+ - **straggler**  the client finishes but misses the server's round
+   cutoff — the upload arrives too late and is excluded (the classic
+   "don't wait for stragglers" policy: the cost is a smaller realized
+   cohort, never a stalled round);
+ - **corrupt**    the upload's mask lanes are corrupted in flight;
+   the server's upload validation (``fault.validate``) detects the
+   damaged payload by its popcount mismatch and excludes it;
+ - **duplicate**  the upload arrives twice (a retry bug); the server
+   deduplicates — the client is aggregated ONCE at its normal weight,
+   the extra copy only costs (and is metered as) wasted uplink bytes.
+
+Fault draws come from the counter-based hash RNG at the FAULT counter
+space, keyed ``(plan.seed, FAULT_CTR, round_index, client_id)`` — NOT
+by the training key and NOT by vmap slot, so a fault scenario is a
+pure function of (seed, round, client): bit-reproducible across the
+vmap and shard_map drivers, across reruns, and under ``lax.scan``
+(``round_index`` may be traced).  One uniform word decides the fault
+via exact integer threshold compares (cumulative rates scaled to
+2^32), so the drawn scenario is identical everywhere the same
+integers are hashed.
+
+Corruption injection draws its garbage from a second, disjoint
+counter space (``CORRUPT_CTR``) and then guarantees detectability: if
+XOR-ing the garbage happened to preserve the upload's total popcount
+(the validation checksum), the injector flips one more bit.  Real
+line noise would evade the popcount check with some probability;
+deterministic injection exists to produce REPLAYABLE detected-fault
+scenarios, so it guarantees the mismatch by construction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..comm.bitpack import packed_total_popcount
+from ..core.hashrng import hash_u32
+
+# Counter-space roles (disjoint from core.sampling's MASK_CTR /
+# QUANT_DITHER_CTR and fault.population's COHORT_CTR): fault draws are
+# (seed, FAULT_CTR, round, client); corruption garbage words are
+# (seed, tensor_id, CORRUPT_CTR, round, client, lane/coord).
+FAULT_CTR = 0x0028_0000
+CORRUPT_CTR = 0x0030_0000
+
+# Fault codes (the value of one (round, client) draw).
+OK, DROP, STRAGGLER, CORRUPT, DUPLICATE = 0, 1, 2, 3, 4
+
+FAULT_NAMES = ("ok", "drop", "straggler", "corrupt", "duplicate")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Static fault-scenario description: independent per-(round,
+    client) rates, one fault at most per draw (rates must sum <= 1).
+    ``FaultPlan()`` (all zero) exercises the full participation
+    machinery with no faults — the zero-fault path the benchmarks
+    hold bit-identical to (and within 5% of) the plain protocol.
+    """
+
+    dropout: float = 0.0
+    straggler: float = 0.0
+    corrupt: float = 0.0
+    duplicate: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        rates = (self.dropout, self.straggler, self.corrupt,
+                 self.duplicate)
+        if any(r < 0 for r in rates):
+            raise ValueError(f"fault rates must be >= 0, got {rates}")
+        if sum(rates) > 1.0:
+            raise ValueError(
+                f"fault rates sum to {sum(rates)} > 1 (one fault at "
+                f"most per (round, client) draw)"
+            )
+
+    def thresholds(self):
+        """Cumulative uint32 compare thresholds (static, exact)."""
+        edges = np.cumsum([self.dropout, self.straggler, self.corrupt,
+                           self.duplicate])
+        return [np.uint32(min(int(round(float(e) * 4294967296.0)),
+                              0xFFFFFFFF))
+                for e in edges]
+
+
+def draw_faults(plan: FaultPlan, round_index, client_ids):
+    """Fault codes for (round, clients): uint32 in {OK..DUPLICATE}.
+
+    ``client_ids`` may be a (K,) array (vmap driver) or a scalar (one
+    shard of the shard_map driver) — the same (round, client) pair
+    hashes to the same code on both.
+    """
+    rid = jnp.asarray(round_index).astype(jnp.uint32)
+    ids = jnp.asarray(client_ids).astype(jnp.uint32)
+    u = hash_u32(plan.seed, FAULT_CTR, rid, ids)
+    t_drop, t_strag, t_corr, t_dup = plan.thresholds()
+    code = jnp.where(
+        u < t_drop, DROP,
+        jnp.where(u < t_strag, STRAGGLER,
+                  jnp.where(u < t_corr, CORRUPT,
+                            jnp.where(u < t_dup, DUPLICATE, OK))))
+    return code.astype(jnp.uint32)
+
+
+def _garbage_u32(plan, spec, round_index, client_ids, length: int):
+    """(..., length) garbage words at the corruption counter space."""
+    rid = jnp.asarray(round_index).astype(jnp.uint32)
+    ids = jnp.asarray(client_ids).astype(jnp.uint32)
+    coords = jnp.arange(length, dtype=jnp.uint32)
+    return hash_u32(plan.seed, spec.tensor_id, CORRUPT_CTR, rid,
+                    ids[..., None], coords)
+
+
+def corrupt_uploads(plan: FaultPlan, z_all, declared, corrupt_mask,
+                    round_index, client_ids, zspecs, packed: bool):
+    """Apply lane corruption to the uploads of flagged clients.
+
+    ``z_all``: {path: upload} with an optional leading client axis —
+    uint32 lanes when ``packed``, f32 masks/probabilities otherwise.
+    ``declared``: the per-tensor upload checksums computed BEFORE the
+    wire (``fault.validate.upload_counts``) — the header is assumed to
+    travel intact; only the payload is damaged.  ``corrupt_mask``:
+    boolean, client-shaped.  Returns the corrupted pytree; the
+    popcount/sum of every corrupted tensor is guaranteed != declared,
+    so ``validate_uploads`` detects every injected fault.
+    """
+    out = {}
+    for path, spec in zspecs.specs.items():
+        z = z_all[path]
+        g = _garbage_u32(plan, spec, round_index, client_ids,
+                         z.shape[-1])
+        if packed:
+            bad = (z ^ g).astype(jnp.uint32)
+            clash = packed_total_popcount(bad) == declared[path]
+            bad = bad.at[..., 0].set(
+                jnp.where(clash, bad[..., 0] ^ jnp.uint32(1),
+                          bad[..., 0])
+            )
+        else:
+            # replace the payload with garbage bits; same guarantee on
+            # the f32 sum checksum (exact: binary values, n < 2^24)
+            bad = (g >> np.uint32(31)).astype(z.dtype)
+            clash = jnp.sum(bad, axis=-1) == declared[path]
+            bad = bad.at[..., 0].set(
+                jnp.where(clash, 1.0 - bad[..., 0], bad[..., 0])
+            )
+        mask = corrupt_mask[..., None] if z.ndim > 1 else corrupt_mask
+        out[path] = jnp.where(mask, bad, z)
+    return out

@@ -1,0 +1,125 @@
+"""Client population + cohort sampling (ROADMAP "million-client round
+engine", the sampling face).
+
+Production FL trains K ≈ tens of clients per round drawn from a
+population of N ≫ K virtual clients (Konečný et al., PAPERS.md).  A
+``ClientPopulation`` is the static description of that population —
+its size and the per-client SAMPLE COUNTS (dataset sizes, e.g. the
+label-histogram row sums of ``data.federated_split
+.dirichlet_client_split``) that become the aggregation weights of the
+partial-participation round (``core.federated.federated_round``'s
+``weights``: exact uint32 multiplies inside the popcount psum).
+
+Cohort draw: every client gets a priority word from the counter-based
+hash RNG at the cohort counter space,
+
+    priority_i = hash_u32(seed, COHORT_CTR, round_index, i),
+
+and the round's cohort is the K smallest priorities (a deterministic
+uniform K-of-N draw; ties are broken by index by the stable argsort).
+Three properties the round engine needs fall out of keying on
+``(seed, round_index, client_id)`` alone:
+
+ - **deterministic + replayable**: the HOST data stager (which must
+   know the cohort before it can build the round's batch slab — see
+   ``data.federated_split.cohort_batch_stream``) and the traced round
+   body regenerate the identical cohort from the same integers, with
+   no PRNG key threading;
+ - **scan-compatible**: ``round_index`` may be a traced scan counter —
+   the draw is a pure jnp function of it;
+ - **path-independent**: the cohort does not depend on the training
+   key or on vmap-vs-shard_map execution, so fault/participation
+   scenarios replay bit-identically across both drivers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hashrng import hash_u32
+
+# Counter-space role of the cohort stream: hash words are
+# (seed, COHORT_CTR, round_index, client_id) — disjoint from the mask
+# (MASK_CTR), dither (QUANT_DITHER_CTR) and fault (FAULT_CTR /
+# CORRUPT_CTR) spaces, so sampling a cohort can never alias a draw.
+COHORT_CTR = 0x0020_0000
+
+
+@dataclass(frozen=True)
+class ClientPopulation:
+    """N virtual clients with per-client sample counts.
+
+    ``sample_counts``: optional (N,) integer array of per-client
+    dataset sizes — the weights the weighted aggregation multiplies
+    into the popcount sum (uint32-exact).  ``None`` means the uniform
+    population (every client weight 1), whose weighted round is
+    bit-identical to the unweighted protocol.
+    """
+
+    num_clients: int
+    sample_counts: Optional[tuple] = None  # (N,) ints; None = all ones
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_clients < 1:
+            raise ValueError(
+                f"population needs >= 1 client, got {self.num_clients}"
+            )
+        if self.sample_counts is not None:
+            counts = np.asarray(self.sample_counts)
+            if counts.shape != (self.num_clients,):
+                raise ValueError(
+                    f"sample_counts shape {counts.shape} != "
+                    f"({self.num_clients},)"
+                )
+            if (counts < 1).any():
+                raise ValueError(
+                    "per-client sample counts must be >= 1 (a weight-0 "
+                    "client can never contribute; drop it from the "
+                    "population instead)"
+                )
+            # frozen dataclass: normalize to a hashable static tuple
+            object.__setattr__(
+                self, "sample_counts", tuple(int(c) for c in counts)
+            )
+
+    def counts(self) -> jnp.ndarray:
+        """(N,) uint32 per-client sample counts (ones if unset)."""
+        if self.sample_counts is None:
+            return jnp.ones((self.num_clients,), jnp.uint32)
+        return jnp.asarray(self.sample_counts, jnp.uint32)
+
+    def priorities(self, round_index) -> jnp.ndarray:
+        """(N,) uint32 cohort priority words for one round."""
+        rid = jnp.asarray(round_index).astype(jnp.uint32)
+        ids = jnp.arange(self.num_clients, dtype=jnp.uint32)
+        return hash_u32(self.seed, COHORT_CTR, rid, ids)
+
+    def sample_cohort(self, round_index, cohort_size: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The round's cohort: (client_ids, weights), both
+        (cohort_size,) uint32, ids sorted ascending.
+
+        Pure in ``(seed, round_index)`` — call it host-side to stage
+        data and inside jit to derive draw words; both see the same
+        clients.  ``cohort_size == num_clients`` degenerates to full
+        participation (ids = arange(N)).
+        """
+        if not 1 <= cohort_size <= self.num_clients:
+            raise ValueError(
+                f"cohort_size {cohort_size} not in [1, {self.num_clients}]"
+            )
+        order = jnp.argsort(self.priorities(round_index))
+        ids = jnp.sort(order[:cohort_size]).astype(jnp.uint32)
+        return ids, self.counts()[ids]
+
+    def cohort_np(self, round_index: int, cohort_size: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side (numpy) view of ``sample_cohort`` for data
+        staging loops — the same bits, materialized."""
+        ids, weights = self.sample_cohort(int(round_index), cohort_size)
+        return np.asarray(ids), np.asarray(weights)

@@ -1,0 +1,59 @@
+"""Server-side upload validation: popcount checksums on the wire.
+
+The uplink is binary — a client's upload of tensor ``path`` is either
+uint32 mask lanes (packed transports) or an f32 {0,1} mask — so its
+TOTAL popcount is an exact small integer in every representation
+(f32 holds any count below 2^24 exactly; continuous-mode probability
+uploads use the same f32 sum, computed identically on both ends).
+The client declares that count in a tiny per-tensor header (4 bytes —
+unmetered protocol overhead, < 1e-4 of any upload) and the server
+recomputes it from the received payload.  A corrupted upload fails the
+compare; a count above the tensor's coordinate total ``spec.n`` fails
+the sanity bound even if the header itself was damaged.  Validation
+failures EXCLUDE the upload from the weighted aggregate (its
+participation bit drops to 0) and are counted in the round metrics
+(``num_corrupt``).
+
+Both drivers run the same checks: the vmap path on (K, ...) stacked
+uploads (returning a (K,) verdict), the shard_map path on one shard's
+upload (returning a scalar verdict) — the checksum math is shape-
+polymorphic over leading batch axes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..comm.bitpack import packed_total_popcount
+
+
+def upload_counts(z_all, zspecs, packed: bool):
+    """Per-tensor upload checksums, computed on the CLIENT side before
+    the wire: {path: count} with the uploads' leading batch axes.
+    uint32 total popcounts for packed lanes, exact f32 sums otherwise.
+    """
+    out = {}
+    for path in zspecs.specs:
+        z = z_all[path]
+        if packed:
+            out[path] = packed_total_popcount(z)
+        else:
+            out[path] = jnp.sum(z, axis=-1)
+    return out
+
+
+def validate_uploads(z_all, declared, zspecs, packed: bool):
+    """Recompute every tensor's checksum from the RECEIVED payload and
+    compare against the declared counts; bound-check against ``spec.n``.
+
+    Returns a boolean verdict per client (batch-shaped like the
+    uploads' leading axes; scalar on the per-shard path): True iff
+    every tensor of that client's upload is intact and in-bounds.
+    """
+    received = upload_counts(z_all, zspecs, packed)
+    valid = None
+    for path, spec in zspecs.specs.items():
+        c = received[path]
+        ok = (c == declared[path]) & (c <= spec.n)
+        valid = ok if valid is None else (valid & ok)
+    return valid

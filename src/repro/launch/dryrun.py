@@ -157,11 +157,11 @@ def build_train_zampling(cfg: ArchConfig, shape: InputShape, mesh,
         ),
         P(),
     )
-    from ..core.federated import WIRE_METRIC_KEYS
+    from ..core.federated import ROUND_METRIC_KEYS
 
     sm_out_specs = (
         jax.tree.map(lambda _: P(), tstate),
-        {"loss": P(), **{k: P() for k in WIRE_METRIC_KEYS}},
+        {k: P() for k in ROUND_METRIC_KEYS},
     )
 
     smapped = jax.shard_map(
@@ -173,8 +173,7 @@ def build_train_zampling(cfg: ArchConfig, shape: InputShape, mesh,
         in_shardings=(state_shard, batch_shard, NamedSharding(mesh, P())),
         out_shardings=(
             state_shard,
-            {"loss": NamedSharding(mesh, P()),
-             **{k: NamedSharding(mesh, P()) for k in WIRE_METRIC_KEYS}},
+            {k: NamedSharding(mesh, P()) for k in ROUND_METRIC_KEYS},
         ),
         donate_argnums=(0,),
     )

@@ -17,6 +17,17 @@ production mesh, where each shard sees its own (R, E, ...) batch slab
 and the per-round mask aggregation stays a single collective
 (``FederatedConfig.aggregate`` selects the wire transport).
 
+Partial participation (``repro.fault``) threads through both scans:
+``client_ids`` / ``weights`` are per-round xs — (R, K) stacked slabs
+on the vmap driver, per-shard (R,) slices under shard_map (stage them
+host-side from ``ClientPopulation.cohort_np``, the same draw the
+traced round replays) — and ``faults`` is a static ``FaultPlan``
+whose per-(round, client) draws key on the scanned round counter, so
+one compiled block covers every fault scenario the plan can produce.
+The scan carry is unchanged: a skipped round (cohort below
+``min_clients``) passes the state through and flags
+``round_skipped`` in that round's metrics row.
+
 Downlink codec (``FederatedConfig.downlink``, ``comm.downlink``): the
 scan CARRY is the codec-encoded score pytree — each round decodes the
 broadcast client-side, trains, aggregates, and re-encodes, so with a
@@ -59,6 +70,22 @@ def _rounds_and_keys(round_batches, key, rounds):
             jnp.arange(r, dtype=jnp.uint32))
 
 
+def _scan_xs(round_batches, keys, rids, client_ids, weights):
+    """The scanned xs dict: batches/keys/round-ids always, the
+    participation slabs only when given (leading axis R on each)."""
+    r = rids.shape[0]
+    xs = {"batches": round_batches, "key": keys, "rid": rids}
+    for name, val in (("client_ids", client_ids), ("weights", weights)):
+        if val is not None:
+            val = jnp.asarray(val)[:r]
+            if val.shape[0] != r:
+                raise ValueError(
+                    f"{name} leading axis {val.shape[0]} != rounds {r}"
+                )
+            xs[name] = val.astype(jnp.uint32)
+    return xs
+
+
 def federated_fit(
     zspecs: ZamplingSpecs,
     state: Dict[str, Any],
@@ -68,6 +95,9 @@ def federated_fit(
     cfg: FederatedConfig,
     opt: Optional[Optimizer] = None,
     rounds: Optional[int] = None,
+    client_ids=None,  # (R, K) uint32 per-round cohort ids
+    weights=None,  # (R, K) uint32 per-round sample-count weights
+    faults=None,  # static FaultPlan (repro.fault)
 ):
     """R federated rounds under one ``lax.scan``.
 
@@ -77,15 +107,17 @@ def federated_fit(
     ``rounds`` runs only the first ``rounds`` entries of the slab.
     """
     round_batches, keys, rids = _rounds_and_keys(round_batches, key, rounds)
+    xs = _scan_xs(round_batches, keys, rids, client_ids, weights)
 
     def body(state, xs):
-        batches, sub, rid = xs
         state, metrics = federated_round(
-            zspecs, state, loss_fn, batches, sub, cfg, opt, round_index=rid
+            zspecs, state, loss_fn, xs["batches"], xs["key"], cfg, opt,
+            round_index=xs["rid"], client_ids=xs.get("client_ids"),
+            weights=xs.get("weights"), faults=faults,
         )
         return state, metrics
 
-    return jax.lax.scan(body, state, (round_batches, keys, rids))
+    return jax.lax.scan(body, state, xs)
 
 
 def sharded_client_fit(
@@ -101,20 +133,25 @@ def sharded_client_fit(
     constraints=None,
     row_sharding=None,
     rounds: Optional[int] = None,
+    client_ids=None,  # per-shard (R,) uint32 global client ids
+    weights=None,  # per-shard (R,) uint32 sample-count weights
+    faults=None,  # static FaultPlan (repro.fault)
 ):
     """R rounds of ``sharded_client_update`` under one ``lax.scan`` —
     run this INSIDE ``shard_map`` (client id = mesh position).  The key
     is replicated; every shard derives the same per-round subkeys and
     ``sharded_client_update`` folds in the axis index per client."""
     round_batches, keys, rids = _rounds_and_keys(round_batches, key, rounds)
+    xs = _scan_xs(round_batches, keys, rids, client_ids, weights)
 
     def body(state, xs):
-        batches, sub, rid = xs
         state, metrics = sharded_client_update(
-            zspecs, state, loss_fn, batches, sub, cfg,
+            zspecs, state, loss_fn, xs["batches"], xs["key"], cfg,
             axis_names=axis_names, opt=opt, constraints=constraints,
-            row_sharding=row_sharding, round_index=rid,
+            row_sharding=row_sharding, round_index=xs["rid"],
+            client_id=xs.get("client_ids"), weight=xs.get("weights"),
+            faults=faults,
         )
         return state, metrics
 
-    return jax.lax.scan(body, state, (round_batches, keys, rids))
+    return jax.lax.scan(body, state, xs)

@@ -4,7 +4,7 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core.federated import WIRE_METRIC_KEYS
+from repro.core.federated import ROUND_METRIC_KEYS
 
 
 def data_mesh_or_skip(size=4, axis="data"):
@@ -17,5 +17,6 @@ def data_mesh_or_skip(size=4, axis="data"):
 
 def round_metric_specs():
     """shard_map out_specs for the metrics dict every federated round
-    returns ({'loss'} + the wire byte counts) — replicated scalars."""
-    return {k: P() for k in ("loss",) + WIRE_METRIC_KEYS}
+    returns (loss + wire bytes + realized-cohort counters) —
+    replicated scalars, keyed off the ONE list in core.federated."""
+    return {k: P() for k in ROUND_METRIC_KEYS}
