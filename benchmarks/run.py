@@ -518,6 +518,120 @@ def bench_faults(full=False):
     return rows
 
 
+def _device_peak_bytes():
+    """Peak device memory if the backend reports it (GPU/TPU
+    ``memory_stats``); ``None`` on CPU, whose allocations go through
+    the host allocator and are invisible to XLA's stats."""
+    import jax
+
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:  # noqa: BLE001 — backend without stats support
+        return None
+    if not stats:
+        return None
+    return stats.get("peak_bytes_in_use")
+
+
+def bench_streaming(full=False):
+    """Streaming cohort accumulator vs the one-shot slab round (this
+    PR's tentpole): identical federated rounds with
+    ``stream_chunk=c`` folding uploads c clients at a time vs the
+    (K, lanes) slab aggregation, K swept to 256.
+
+    Bit-exactness asserted PRE-TIMING at every (K, chunk): the
+    streaming round's aggregated scores must equal the slab round's
+    bit for bit (uint32 vote counts are associative, so chunked
+    folding changes nothing).  ``stream_overhead`` is the streaming
+    round's wall-clock over the slab round's (alternating-run
+    medians); scripts/ci.sh fails if the committed baseline shows
+    > 1.05x at small K.  The memory columns are the analytic model
+    (comm.metering): ``peak_upload_bytes`` — one chunk's lanes plus
+    the (n,) vote accumulator — is a function of the CHUNK only and
+    stays flat as K grows, while ``slab_upload_bytes`` grows linearly;
+    at K=256/chunk=8 the slab holds 32x the lanes.  ``device_peak
+    _bytes`` records the backend's measured peak where the platform
+    reports one (GPU/TPU; None on CPU).  Rows land in
+    BENCH_reconstruct.json keyed (bench, K, strategy=chunk level).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.comm.metering import streaming_peak_bytes, upload_slab_bytes
+    from repro.core import (
+        FederatedConfig, ZamplingConfig, build_specs, init_state,
+    )
+    from repro.core.federated import federated_round
+    from repro.data import make_teacher_dataset
+    from repro.models.mlp import SMALL_DIMS, init_mlp_params, mlp_loss
+
+    ds = make_teacher_dataset(n_train=2000, n_test=200, seed=0)
+    template = init_mlp_params(jax.random.PRNGKey(0), SMALL_DIMS)
+    zspecs = build_specs(template, ZamplingConfig(
+        compression=8.0, d=10, window=128, min_size=128))
+    state0 = init_state(jax.random.PRNGKey(1), zspecs, dense_init=template)
+    E, B = 2, 16
+    rng = np.random.RandomState(0)
+    rows = []
+    # chunk divides K in every timed row: padding the last chunk would
+    # bill the streaming side for wasted local updates and muddy the
+    # pure folding-overhead number the CI gate pins
+    for K, chunk in ((10, 5), (32, 8), (128, 8), (128, 32),
+                     (256, 8), (256, 32)):
+        idx = rng.randint(0, len(ds.x_train), (K, E, B))
+        batch = {"x": jnp.asarray(ds.x_train[idx]),
+                 "y": jnp.asarray(ds.y_train[idx])}
+        key = jax.random.PRNGKey(0)
+        cfg_slab = FederatedConfig(num_clients=K, local_steps=E,
+                                   local_lr=0.5, aggregate="psum_u32")
+        cfg_strm = FederatedConfig(num_clients=K, local_steps=E,
+                                   local_lr=0.5, aggregate="psum_u32",
+                                   stream_chunk=chunk)
+        f_slab = jax.jit(lambda s, b, k, cfg=cfg_slab: federated_round(
+            zspecs, s, mlp_loss, b, k, cfg))
+        f_strm = jax.jit(lambda s, b, k, cfg=cfg_strm: federated_round(
+            zspecs, s, mlp_loss, b, k, cfg))
+        st_a, met_a = f_slab(state0, batch, key)
+        st_b, met_b = f_strm(state0, batch, key)
+        jax.block_until_ready((st_a, st_b))
+        # the acceptance gate, before any timing: chunked folding ==
+        # the slab aggregation, bit for bit
+        for path in st_a["scores"]:
+            np.testing.assert_array_equal(
+                np.asarray(st_a["scores"][path]),
+                np.asarray(st_b["scores"][path]),
+                err_msg=f"streaming scores diverge at {path} "
+                        f"(K={K}, chunk={chunk})",
+            )
+        assert np.isfinite(float(met_b["loss"]))
+        iters = (20 if full else 8) if K <= 32 else (10 if full else 4)
+        us_strm, us_slab = _ab_median(
+            lambda: f_strm(state0, batch, key),
+            lambda: f_slab(state0, batch, key), iters)
+        peak = streaming_peak_bytes(zspecs, "psum_u32", chunk)
+        slab = upload_slab_bytes(zspecs, "psum_u32", K)
+        rows.append({
+            "bench": "streaming_round", "strategy": f"chunk{chunk}",
+            "K": K, "n": zspecs.n_total, "chunk": chunk,
+            "us": us_strm, "slab_us": us_slab,
+            "stream_overhead": us_strm / us_slab,
+            "peak_upload_bytes": peak,
+            "slab_upload_bytes": slab,
+            "slab_vs_peak": slab / peak,
+            "lane_ratio": slab / upload_slab_bytes(zspecs, "psum_u32",
+                                                   chunk),
+            "device_peak_bytes": _device_peak_bytes(),
+        })
+        _emit(f"streaming_round_K{K}_chunk{chunk}", us_strm,
+              f"slab={us_slab:.0f}us"
+              f";overhead={us_strm / us_slab:.3f}x"
+              f";peak={peak / 1024:.0f}KiB"
+              f";slab_mem={slab / 1024:.0f}KiB"
+              f";slab_vs_peak={slab / peak:.1f}x")
+    return rows
+
+
 def _ab_median(f_a, f_b, iters):
     """Median us of each side, alternating runs (load drift cancels)."""
     import jax
@@ -840,6 +954,7 @@ BENCHES = {
     "wire": bench_wire,
     "downlink": bench_downlink,
     "faults": bench_faults,
+    "streaming": bench_streaming,
     "wire_formats": bench_wire_formats,
     "downlink_tradeoff": bench_downlink_tradeoff,
     "table1": bench_table1,
@@ -865,7 +980,7 @@ def main() -> None:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
             if name in ("kernel", "fedround", "fused", "bwd", "threshold",
-                        "wire", "downlink", "faults"):
+                        "wire", "downlink", "faults", "streaming"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

@@ -73,7 +73,27 @@ ap.add_argument("--beta", type=float, default=0.5,
                 help="Dirichlet concentration of the non-IID split")
 ap.add_argument("--min-clients", type=int, default=1,
                 help="skip rounds with fewer survivors than this")
+ap.add_argument("--stream-chunk", type=int, default=0,
+                help="fold uploads this many clients at a time (streaming "
+                     "cohort accumulator; 0 = one-shot slab aggregation; "
+                     "scores are bit-identical either way)")
+ap.add_argument("--het-table", action="store_true",
+                help="print the heterogeneity table (accuracy vs Dirichlet "
+                     "beta per downlink codec) and exit")
 args = ap.parse_args()
+
+if args.het_table:
+    from repro.experiments import run_heterogeneity
+
+    print("accuracy vs Dirichlet beta x downlink codec (quick grid)")
+    print(f"{'beta':>6} {'codec':>6} {'acc':>7} {'std':>6} "
+          f"{'down KiB':>9} {'vs f32':>7}")
+    for row in run_heterogeneity(quick=True):
+        print(f"{row['beta']:>6.2f} {row['codec']:>6} "
+              f"{row['final_sampled_acc']:>7.3f} {row['sampled_std']:>6.3f} "
+              f"{row['downlink_bytes_per_client'] / 1024:>9.1f} "
+              f"{row['downlink_vs_f32']:>7.4f}")
+    raise SystemExit(0)
 
 use_cohort = args.population > 0
 cohort = args.cohort or args.clients
@@ -123,7 +143,8 @@ else:
 fcfg = FederatedConfig(num_clients=cohort if use_cohort else args.clients,
                        local_steps=args.local_steps, local_lr=0.5,
                        aggregate=args.aggregate, downlink=args.downlink,
-                       min_clients=args.min_clients)
+                       min_clients=args.min_clients,
+                       stream_chunk=args.stream_chunk)
 # the round carry is the ENCODED broadcast: quantized codecs carry
 # uint8/uint16 wire words between rounds, never an f32 score slab
 state = encode_state(zspecs, fcfg, state)

@@ -134,10 +134,49 @@ if not {10, 32} <= ks or not {0.0, 0.2, 0.5} <= drops or bad or slow:
              f"commit.")
 print(f"  ok: {len(fau)} fault rows, K={sorted(ks)}, zero-fault overhead "
       f"{max(r['fault_overhead'] for r in fau if r['dropout'] == 0.0):.3f}x")
+
+# streaming-round rows: the chunk-scan accumulator must be measured at
+# K {10, 32, 128, 256} with slab-vs-stream timings and the analytic
+# memory model; the small-K overhead must stay <= 1.05x of the slab
+# round, and the streaming peak must be FLAT as K grows at a fixed
+# chunk while the slab grows linearly — the unbounded-K claim, gated.
+STREAM_KEYS = {"us", "slab_us", "stream_overhead", "chunk",
+               "peak_upload_bytes", "slab_upload_bytes", "K", "n"}
+strm = [r for r in rows if r.get("bench") == "streaming_round"]
+ks = {r.get("K") for r in strm}
+bad = [r for r in strm if not STREAM_KEYS <= set(r)]
+slow = [r for r in strm if r.get("K") == 10
+        and r.get("stream_overhead", 99) > 1.05]
+if not {10, 32, 128, 256} <= ks or bad or slow:
+    sys.exit(f"BENCH_reconstruct.json is stale or regressed: streaming "
+             f"rows for K={sorted(ks)} (need 10, 32, 128, 256); rows "
+             f"missing keys: {bad}; small-K streaming overhead > 1.05x "
+             f"of the slab round: {slow}. Run `python -m benchmarks.run "
+             f"--only streaming` and commit.")
+by_chunk = {}
+for r in strm:
+    by_chunk.setdefault(r["chunk"], []).append(r)
+for chunk, group in by_chunk.items():
+    peaks = {r["peak_upload_bytes"] for r in group}
+    if len(peaks) != 1:
+        sys.exit(f"streaming peak memory varies with K at chunk={chunk}: "
+                 f"{sorted(peaks)} — the accumulator is no longer "
+                 f"K-independent")
+grow = [r for r in strm if r["K"] >= 128
+        and r["slab_upload_bytes"] <= r["peak_upload_bytes"]]
+if grow:
+    sys.exit(f"slab upload memory no longer dwarfs the streaming peak at "
+             f"large K: {grow}")
+big = [r for r in strm if r["K"] == 256 and r["chunk"] == 8]
+if not big or big[0]["slab_upload_bytes"] / big[0]["peak_upload_bytes"] < 5:
+    sys.exit(f"K=256 slab-vs-streaming-peak ratio collapsed: {big}")
+print(f"  ok: {len(strm)} streaming rows, K={sorted(ks)}, K=10 overhead "
+      f"{max(r['stream_overhead'] for r in strm if r['K'] == 10):.3f}x, "
+      f"peak flat per chunk")
 EOF
 
-echo "== reconstruction + fused + bwd + wire + downlink + fault benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults
+echo "== reconstruction + fused + bwd + wire + downlink + fault + streaming benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults,streaming
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -172,4 +211,11 @@ for r in rows:
         print(f"  fault dropout={r['dropout']:<4} K={r['K']:>3}: "
               f"{r['us']/1e3:8.1f}ms vs plain {r['plain_us']/1e3:8.1f}ms "
               f"({r['fault_overhead']:.3f}x)")
+    elif r.get("bench") == "streaming_round":
+        print(f"  strm chunk={r['chunk']:<3} K={r['K']:>3}: "
+              f"{r['us']/1e3:8.1f}ms vs slab {r['slab_us']/1e3:8.1f}ms "
+              f"({r['stream_overhead']:.3f}x); peak "
+              f"{r['peak_upload_bytes']/1024:.0f}KiB vs slab "
+              f"{r['slab_upload_bytes']/1024:.0f}KiB "
+              f"({r['slab_vs_peak']:.1f}x)")
 EOF

@@ -36,6 +36,8 @@ from .metering import (
     mask_uplink_bytes,
     round_wire_report,
     score_downlink_bytes,
+    streaming_peak_bytes,
+    upload_slab_bytes,
     wire_table,
 )
 from .protocol import (
@@ -52,6 +54,7 @@ __all__ = [
     "DownlinkCodec", "codec_for_dtype", "codec_names", "get_codec",
     "register_codec",
     "mask_uplink_bytes", "score_downlink_bytes", "round_wire_report",
+    "upload_slab_bytes", "streaming_peak_bytes",
     "wire_table", "downlink_table",
     "Transport", "get_transport", "register_transport",
     "resolve_transport", "transport_names",

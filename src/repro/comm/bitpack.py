@@ -84,6 +84,20 @@ def packed_weighted_sum(packed, n: int, weights):
     return counts.reshape(-1)[:n]
 
 
+def packed_weighted_fold(acc, packed, n: int, weights):
+    """Fold one CHUNK of packed uploads into a running vote-count
+    accumulator — the streaming form of ``packed_weighted_sum``.
+
+    ``acc``: (n,) uint32 counts so far; ``packed``: (C, ceil(n/32))
+    uint32 lanes of this chunk's C uploads; ``weights``: (C,) uint32.
+    uint32 addition is associative, so folding chunk-by-chunk yields
+    the IDENTICAL integer counts as one ``packed_weighted_sum`` over
+    the full (K, L) slab, for any chunking — the peak operand is
+    O(C·L) instead of O(K·L).
+    """
+    return acc + packed_weighted_sum(packed, n, weights)
+
+
 def packed_total_popcount(packed):
     """Total set bits over the trailing lane axis (leading batch axes
     kept) -> uint32.  The per-tensor upload checksum of the fault

@@ -90,6 +90,32 @@ def round_wire_report(zspecs, aggregate: str, num_clients: int,
     }
 
 
+def upload_slab_bytes(zspecs, aggregate: str, num_clients: int,
+                      mode: str = "sample") -> float:
+    """Device bytes of the stacked (K, lanes) upload slab the one-shot
+    aggregation materializes before reducing — the quantity the
+    streaming accumulator (``FederatedConfig.stream_chunk``) bounds.
+
+    Per client this equals the wire bytes of its mask upload (uint32
+    lanes on the packed transports, 4·n f32 on ``mean_f32``); the slab
+    is K of them resident at once.
+    """
+    t = resolve_transport(aggregate, mode)
+    per = sum(mask_uplink_bytes(t, s.n) for s in zspecs.specs.values())
+    return float(per * num_clients)
+
+
+def streaming_peak_bytes(zspecs, aggregate: str, chunk: int,
+                         mode: str = "sample") -> float:
+    """Peak upload-side device bytes of the STREAMING round: one
+    chunk's lanes plus the (n,) vote-count accumulator per tensor —
+    independent of K.  ``upload_slab_bytes(zspecs, agg, K) /
+    streaming_peak_bytes(zspecs, agg, chunk)`` is the memory saving a
+    K-client streaming round realizes."""
+    acc = sum(_F32_BYTES * s.n for s in zspecs.specs.values())
+    return upload_slab_bytes(zspecs, aggregate, chunk, mode) + acc
+
+
 def realized_wire_metrics(report: Dict[str, float], uplink_units,
                           cohort_size: int) -> Dict:
     """Scale a round's exact per-client byte counts by the REALIZED
@@ -163,6 +189,7 @@ def downlink_table(zspecs, num_clients: int,
 
 __all__ = [
     "mask_uplink_bytes", "score_downlink_bytes", "round_wire_report",
-    "realized_wire_metrics", "wire_table", "downlink_table",
+    "realized_wire_metrics", "upload_slab_bytes", "streaming_peak_bytes",
+    "wire_table", "downlink_table",
     "get_transport", "get_codec",
 ]

@@ -39,6 +39,20 @@ Each strategy exposes both execution paths of the federated round:
 one host) and ``aggregate_collective`` for the ``shard_map`` production
 path where the client axis is a mesh axis and the collective IS the
 network.
+
+STREAMING aggregation (the unbounded-K mode, ``core.federated``
+``stream_chunk``): every strategy additionally exposes ``stream_init``
+/ ``fold_stacked_weighted`` / ``fold_stacked_packed_weighted`` — the
+server holds one (n,) accumulator of unnormalized weighted vote counts
+and FOLDS each chunk of C uploads into it as they "arrive", so the
+(K, n) slab never materializes and peak upload memory is O(C·n)
+whatever K is.  The fold is bit-exact against the slab reduction by
+construction: the packed carry is uint32 (integer addition is
+associative) and the ``mean_f32`` carry is an f32 sum of exact
+integer-valued terms (binary z × integer weight, exact while
+``sum(w) < 2^24``) — the same exact integer counts in a different
+association.  A straggler past the round cutoff is simply an upload
+never folded in.
 """
 
 from __future__ import annotations
@@ -52,6 +66,7 @@ from .bitpack import (
     pack_mask,
     packed_len,
     packed_popcount_sum,
+    packed_weighted_fold,
     packed_weighted_sum,
     unpack_mask,
 )
@@ -126,6 +141,32 @@ class Transport:
         raise NotImplementedError(
             f"transport {self.name!r} does not take packed lanes"
         )
+
+    # ---- streaming folds (unbounded K): the server's accumulator is
+    # ONE (n,) vote-count vector; chunks of C uploads fold into it so
+    # the (K, ·) slab never materializes.  Defined once here in terms
+    # of the unnormalized weighted sums, so every strategy streams with
+    # the identical integer arithmetic it uses on the slab path.
+
+    def stream_init(self, n: int):
+        """Zero vote-count accumulator for an n-coordinate mask:
+        uint32 on the packed-wire strategies, f32 (exact integer
+        values) on ``mean_f32``."""
+        dtype = jnp.uint32 if self.packed_wire else jnp.float32
+        return jnp.zeros((n,), dtype)
+
+    def fold_stacked_weighted(self, acc, Z, weights):
+        """Fold a (C, n) mask chunk × (C,) uint32 weights into the
+        (n,) f32 accumulator.  Each chunk sum is an exact integer in
+        f32, so any chunking reproduces the slab sum bit for bit."""
+        return acc + self.aggregate_stacked_weighted(Z, weights)
+
+    def fold_stacked_packed_weighted(self, acc, lanes, n: int, weights):
+        """Fold a (C, L) uint32 lane chunk × (C,) uint32 weights into
+        the (n,) uint32 accumulator (associative integer addition —
+        bit-identical to the one-shot slab reduction)."""
+        return acc + self.aggregate_stacked_packed_weighted(lanes, n,
+                                                            weights)
 
 
 class MeanF32(Transport):
@@ -206,6 +247,9 @@ class PsumU32(Transport):
     def aggregate_stacked_packed_weighted(self, lanes, n, weights):
         return packed_weighted_sum(lanes, n, weights)
 
+    def fold_stacked_packed_weighted(self, acc, lanes, n, weights):
+        return packed_weighted_fold(acc, lanes, n, weights)
+
     def aggregate_collective_packed_weighted(self, lanes, n, weight,
                                              axis_names):
         names = tuple(axis_names)
@@ -242,6 +286,9 @@ class AllgatherPacked(Transport):
 
     def aggregate_stacked_packed_weighted(self, lanes, n, weights):
         return packed_weighted_sum(lanes, n, weights)
+
+    def fold_stacked_packed_weighted(self, acc, lanes, n, weights):
+        return packed_weighted_fold(acc, lanes, n, weights)
 
     def aggregate_collective_packed_weighted(self, lanes, n, weight,
                                              axis_names):

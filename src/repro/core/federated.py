@@ -88,6 +88,28 @@ KEYS``) and ``comm.metering.realized_wire_metrics`` replaces the
 configured byte totals with realized ones (corrupt uploads still
 spend uplink bytes; duplicates spend them twice; drops spend none).
 
+STREAMING AGGREGATION (unbounded K, ``FederatedConfig.stream_chunk``):
+the vmap driver above still materializes the cohort's uploads as a
+(K, lanes) slab before reducing, so device memory — not the wire —
+caps K.  With ``stream_chunk=C > 0`` the round becomes a ``lax.scan``
+over ceil(K/C) upload chunks whose carry IS the server state: the
+unnormalized uint32 weighted vote counts (plus f32 dense sums, the
+uint32 weight sum, and the realized-cohort counters).  Each scan step
+trains one chunk of C clients, runs the SAME per-upload fault pipeline
+(draws key on the global client id, so scenarios replay bit-
+identically), and folds the chunk's lanes into the accumulator
+(``comm.protocol`` ``fold_stacked_*`` -> ``comm.bitpack.packed_
+weighted_fold``).  Integer addition is associative, so after the one
+reciprocal normalization at the end the scores are BIT-IDENTICAL to
+the slab path at any K and chunk size (tests/test_streaming.py);
+peak upload memory is O(C·n) whatever K is, and a straggler past the
+cutoff is simply an upload never folded in.  A non-dividing last chunk
+is padded with weight-0, live-masked replays of leading clients —
+excluded from every count.  Host-side, ``train.fit.streamed_
+federated_fit`` double-buffers the NEXT cohort's batches onto the
+device (``jax.device_put``) under the current round's dispatched
+compute.
+
 Two execution paths with identical math AND identical draws (the
 per-client draw words coincide, so the two paths produce bit-identical
 scores for the same key/round_index):
@@ -146,11 +168,23 @@ class FederatedConfig:
     # AND validated) is smaller than this is skipped — state carried
     # forward unchanged, metrics flag round_skipped
     min_clients: int = 1
+    # streaming aggregation: fold uploads into the (n,) vote-count
+    # accumulator in chunks of this many clients (lax.scan carry), so
+    # the (K, n) upload slab never materializes and peak upload memory
+    # is O(stream_chunk * n) whatever K is.  0 (default) = the one-shot
+    # slab path; a chunk >= K also falls through to it (one chunk IS
+    # the slab).  Scores are bit-identical either way.
+    stream_chunk: int = 0
 
     def __post_init__(self):
         if self.min_clients < 1:
             raise ValueError(
                 f"min_clients must be >= 1, got {self.min_clients}"
+            )
+        if self.stream_chunk < 0:
+            raise ValueError(
+                f"stream_chunk must be >= 0 (0 = slab path), got "
+                f"{self.stream_chunk}"
             )
         if self.aggregate not in transport_names():
             raise ValueError(
@@ -421,11 +455,17 @@ def _resolve_faults(zspecs, packed, z_all, faults, round_index, ids):
     return z_wire, codes, arrived, arrived & valid
 
 
-def _fault_counts(codes, arrived, participating):
-    """Realized-cohort counters from per-client fault state (f32)."""
+def _fault_counts(codes, arrived, participating, live=None):
+    """Realized-cohort counters from per-client fault state (f32).
+
+    ``live`` masks out the padding lanes of a streaming chunk (the last
+    chunk is padded up to ``stream_chunk`` with replayed clients at
+    weight 0) — a padded lane must not count anywhere."""
     from ..fault.plan import DROP, DUPLICATE, STRAGGLER
 
     def cnt(mask):
+        if live is not None:
+            mask = mask & live
         return jnp.sum(mask.astype(jnp.float32))
 
     dup = cnt(codes == DUPLICATE)
@@ -439,6 +479,154 @@ def _fault_counts(codes, arrived, participating):
         # them; each duplicate upload arrives twice
         "uplink_units": cnt(arrived) + dup,
     }
+
+
+# streaming-carry counter keys: the f32 scalars accumulated across
+# chunks alongside the vote counts (uplink_units is popped into the
+# realized byte metrics, the rest are PARTICIPATION_METRIC_KEYS)
+_STREAM_COUNTER_KEYS = ("num_participating", "num_dropped",
+                        "num_stragglers", "num_corrupt",
+                        "num_duplicates", "uplink_units")
+
+
+def _streaming_round(zspecs, state, loss_fn, client_batches, key, cfg,
+                     opt, transport, packed, *, round_index, ids, w,
+                     faults, k):
+    """The unbounded-K round: a ``lax.scan`` over upload CHUNKS with
+    the unnormalized weighted vote counts as carry.
+
+    The slab round materializes every client's upload as a (K, lanes)
+    stack before reducing, so device memory — not the wire — caps K.
+    Here the K clients are processed ``stream_chunk`` at a time: each
+    scan step runs the chunk's local updates, applies the per-upload
+    fault pipeline (``_resolve_faults`` is shape-polymorphic over the
+    leading axis, so draws still key on the GLOBAL client id and any
+    fault scenario replays bit-identically), and FOLDS the chunk's
+    uploads into the carry via the transport's ``fold_stacked_*``
+    hooks.  Peak upload memory is O(chunk·n), independent of K.
+
+    Carry = {uint32 (or exact-integer f32) vote counts per tensor, f32
+    weighted dense sums, uint32 weight sum, f32 loss sum, f32 fault
+    counters}.  Integer sums are associative, so after the final
+    reciprocal normalization the scores are BIT-IDENTICAL to the slab
+    path at any K and chunk size; dense leaves and loss are f32 sums
+    re-associated across chunks (allclose, not bitwise — same contract
+    as the cross-driver comparison).
+
+    ``k % stream_chunk != 0`` pads the last chunk by replaying leading
+    clients at weight 0 under a ``live=False`` mask: a padded lane
+    replays a real client's fault draw and upload but is excluded from
+    the vote counts, the weight sum, every counter, and the loss.
+    """
+    chunk = cfg.stream_chunk
+    nchunks = -(-k // chunk)
+    pad = nchunks * chunk - k
+
+    def chunked(x):
+        if pad:
+            x = jnp.concatenate([x, x[:pad]], axis=0)
+        return x.reshape((nchunks, chunk) + x.shape[1:])
+
+    live = jnp.arange(nchunks * chunk, dtype=jnp.uint32) < jnp.uint32(k)
+    xs = {
+        "batches": jax.tree.map(chunked, client_batches),
+        "ids": chunked(ids),
+        "w": chunked(w),
+        "live": live.reshape(nchunks, chunk),
+    }
+    rword = jnp.asarray(round_index).astype(jnp.uint32)
+
+    def one(batches, word):
+        return local_update(zspecs, state, loss_fn, batches, word, cfg,
+                            opt)
+
+    carry0 = {
+        "votes": {p: transport.stream_init(spec.n)
+                  for p, spec in zspecs.specs.items()},
+        "dense": jax.tree.map(
+            lambda d: jnp.zeros(jnp.shape(d), jnp.float32),
+            dict(state["dense"]),
+        ),
+        "wsum": jnp.uint32(0),
+        "loss": jnp.float32(0),
+        **{c: jnp.float32(0) for c in _STREAM_COUNTER_KEYS},
+    }
+
+    def body(carry, x):
+        words = fold_word(as_word(key), rword, x["ids"])
+        z_all, dense_all, losses = jax.vmap(one)(x["batches"], words)
+        z_wire, codes, arrived, participating = _resolve_faults(
+            zspecs, packed, z_all, faults, round_index, x["ids"])
+        chunk_live = x["live"]
+        participating = participating & chunk_live
+        w_eff = x["w"] * participating.astype(jnp.uint32)
+        if packed:
+            votes = {
+                p: transport.fold_stacked_packed_weighted(
+                    carry["votes"][p], z_wire[p], zspecs.specs[p].n,
+                    w_eff)
+                for p in z_wire
+            }
+        else:
+            votes = {
+                p: transport.fold_stacked_weighted(carry["votes"][p], z,
+                                                   w_eff)
+                for p, z in z_wire.items()
+            }
+        w_f = w_eff.astype(jnp.float32)
+
+        def dense_fold(acc, d):
+            wcol = w_f.reshape((chunk,) + (1,) * (d.ndim - 1))
+            return acc + jnp.sum(d * wcol, axis=0)
+
+        counts = _fault_counts(codes, arrived, participating,
+                               live=chunk_live)
+        new = {
+            "votes": votes,
+            "dense": jax.tree.map(dense_fold, carry["dense"], dense_all),
+            "wsum": carry["wsum"] + jnp.sum(w_eff, dtype=jnp.uint32),
+            "loss": carry["loss"] + jnp.sum(
+                losses * participating.astype(jnp.float32)),
+            **{c: carry[c] + counts[c] for c in _STREAM_COUNTER_KEYS},
+        }
+        return new, None
+
+    acc, _ = jax.lax.scan(body, carry0, xs)
+
+    wsum = acc["wsum"].astype(jnp.float32)
+    safe_wsum = jnp.where(wsum > 0, wsum, jnp.float32(1))
+    # reciprocal form, matching the slab participation branch — see
+    # federated_round
+    recip = jnp.float32(1.0) / safe_wsum
+    agg = {
+        p: (v.astype(jnp.float32) if packed else v) * recip
+        for p, v in acc["votes"].items()
+    }
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    new_dense_agg = jax.tree.map(lambda a: a * recip, acc["dense"])
+    skip = acc["num_participating"] < cfg.min_clients
+    new_scores = {
+        p: jnp.where(skip, state["scores"][p], new_enc[p])
+        for p in new_enc
+    }
+    new_dense = jax.tree.map(
+        lambda old, new: jnp.where(skip, old, new),
+        dict(state["dense"]), new_dense_agg,
+    )
+    cnt = acc["num_participating"]
+    safe_cnt = jnp.where(cnt > 0, cnt, jnp.float32(1))
+    loss = acc["loss"] * (jnp.float32(1.0) / safe_cnt)
+    metrics = {
+        "loss": loss,
+        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k),
+                                acc["uplink_units"], k),
+        "cohort_size": float(k),
+        **{c: acc[c] for c in _STREAM_COUNTER_KEYS
+           if c != "uplink_units"},
+        "weight_sum": wsum,
+        "round_skipped": skip.astype(jnp.float32),
+    }
+    return {"scores": new_scores, "dense": new_dense}, metrics
 
 
 def federated_round(
@@ -468,6 +656,11 @@ def federated_round(
     the exact PR-5 code path, bit for bit.  K is the stacked batch's
     leading axis; ``cfg.num_clients`` only names the default
     population.
+
+    ``cfg.stream_chunk > 0`` (and < K) reroutes to the streaming
+    accumulator (``_streaming_round``): same signature, same metrics
+    key set, bit-identical scores, O(stream_chunk·n) peak upload
+    memory instead of O(K·n).
     """
     transport = resolve_transport(cfg.aggregate, cfg.mode)
     packed = mask_program(zspecs, cfg).packed
@@ -476,6 +669,17 @@ def federated_round(
                      or faults is not None)
     ids = (jnp.arange(k, dtype=jnp.uint32) if client_ids is None
            else jnp.asarray(client_ids).astype(jnp.uint32))
+    if cfg.stream_chunk and cfg.stream_chunk < k:
+        # streaming aggregation: fold uploads chunk-by-chunk into the
+        # vote-count carry; the (K, lanes) slab never materializes and
+        # the scores are bit-identical to the slab path below
+        w = (jnp.ones((k,), jnp.uint32) if weights is None
+             else jnp.asarray(weights).astype(jnp.uint32))
+        return _streaming_round(
+            zspecs, state, loss_fn, client_batches, key, cfg, opt,
+            transport, packed, round_index=round_index, ids=ids, w=w,
+            faults=faults, k=k,
+        )
     words = fold_word(
         as_word(key), jnp.asarray(round_index).astype(jnp.uint32), ids,
     )

@@ -514,10 +514,13 @@ def _sample_one(spec: QSpec, p, step, qbits=None):
 def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size,
                    qbits=None):
     if model_size is not None and spec.shard_count > 1:
-        from .qz_sharded import sharded_reconstruct
+        # shard-local draw: each shard hashes only its own nw_loc
+        # windows at GLOBAL coordinates — bit-identical to drawing the
+        # replicated (n,) mask and slicing, without materializing it
+        from .qz_sharded import sharded_sample_reconstruct
 
-        return sharded_reconstruct(spec, _sample_one(spec, p, step, qbits),
-                                   model_size)
+        return sharded_sample_reconstruct(spec, p, step, model_size,
+                                          qbits=qbits)
     if impl == "pallas":
         assert spec.shard_count == 1, "pallas path is single-block layout"
         return _unmove(spec, _pk.qz_sample_reconstruct_fwd(spec, p, step,
@@ -531,11 +534,11 @@ def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size,
 def _fwd_many_fused(spec: QSpec, P, steps, impl, chunks, model_size,
                     qbits=None):
     if model_size is not None and spec.shard_count > 1:
-        from .qz_sharded import sharded_reconstruct_batched
+        # shard-local batched draw (see _fwd_one_fused)
+        from .qz_sharded import sharded_sample_reconstruct_batched
 
-        return sharded_reconstruct_batched(
-            spec, _sample_one(spec, P, steps, qbits), model_size
-        )
+        return sharded_sample_reconstruct_batched(spec, P, steps,
+                                                  model_size, qbits=qbits)
     if impl == "pallas":
         assert spec.shard_count == 1, "pallas path is single-block layout"
         return _unmove_batched(

@@ -170,6 +170,104 @@ def sharded_reconstruct_batched(spec: QSpec, Z, ms: int):
 
 
 # ---------------------------------------------------------------------------
+# Fused shard-local draw: each shard hashes ONLY its own nw_loc windows.
+# ---------------------------------------------------------------------------
+
+def _local_draw(spec: QSpec, pl, step, qbits):
+    """This shard's mask bits, drawn from the hash stream at GLOBAL
+    coordinates.
+
+    The counter-hash RNG keys every bit on ``(seed, tensor_id, step,
+    coord)`` with ``coord`` the global z index, so shard ``sid`` can
+    draw its own contiguous slice ``[sid·n_loc, (sid+1)·n_loc)``
+    (n_loc = nw_loc·window) without the replicated (n,) mask ever
+    existing: the bits equal the global draw's slice EXACTLY.  ``pl``
+    is the shard's probability slice — f32, or b-bit wire words with
+    ``qbits`` (widened-threshold integer compare, as
+    ``core.sampling.sample_mask_qhash``).  ``step`` broadcasts against
+    ``pl``'s leading axes (scalar, or (K,) for the batched op).
+    """
+    from ..core.sampling import bernoulli_u32, mask_u32, quant_threshold_u24
+
+    n_loc = spec.nw_loc * spec.window
+    sid = jax.lax.axis_index(AXIS).astype(jnp.uint32)
+    coords = sid * jnp.uint32(n_loc) + jnp.arange(n_loc, dtype=jnp.uint32)
+    step = jnp.asarray(step, jnp.uint32)
+    u = mask_u32(spec.seed, spec.tensor_id, step[..., None], coords)
+    if qbits is not None:
+        thr = quant_threshold_u24(pl, qbits)
+        return ((u >> jnp.uint32(8)) < thr).astype(jnp.float32)
+    return bernoulli_u32(u, pl)
+
+
+def sharded_sample_reconstruct(spec: QSpec, p, step, ms: int, qbits=None):
+    """Fused w = Q·Bern(p) with the DRAW inside the shard_map body.
+
+    ``p``: (n,) probabilities (or quantized words with ``qbits``),
+    sharded/shardable P('model'); ``step``: replicated uint32 draw
+    word.  Each shard draws only its own ``nw_loc`` windows from the
+    hash stream at global coordinates (``_local_draw``) and contracts
+    them locally — no replicated (n,) mask is ever materialized, and
+    the result is bit-identical to
+    ``sharded_reconstruct(spec, sample_mask_hash(p, ...), ms)``.
+    """
+    _check(spec, ms)
+    a = spec.major_axis
+    loc_moved = (spec.shape[a] // ms,
+                 *spec.shape[:a], *spec.shape[a + 1:])
+
+    def local(pl, st):
+        zf = _local_draw(spec, pl, st, qbits)
+        nc = _num_chunks(spec)
+        rpc = -(-spec.m_pad_loc // nc)
+
+        def one(c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            return jnp.sum(vals * zf[gidx], axis=-1)
+
+        w = jax.lax.map(one, jnp.arange(nc)).reshape(-1)[: spec.m_blk]
+        return jnp.moveaxis(w.reshape(loc_moved), 0, a)
+
+    return _shard_map(local, (P(AXIS), P()), _out_spec(spec))(
+        p, jnp.asarray(step, jnp.uint32)
+    )
+
+
+def sharded_sample_reconstruct_batched(spec: QSpec, Pr, steps, ms: int,
+                                       qbits=None):
+    """Fused batched W = Q·Bern(p^(k)): ``Pr`` (K, n) sharded
+    P(None, 'model'), ``steps`` (K,) replicated draw words.  One
+    in-body draw of the (K, n_loc) local mask slab (global-coordinate
+    hash — bit-identical to the replicated draw's slice), one chunk
+    index/value generation shared by all K clients, zero collectives.
+    """
+    _check(spec, ms)
+    a = spec.major_axis
+    loc_moved = (spec.shape[a] // ms,
+                 *spec.shape[:a], *spec.shape[a + 1:])
+
+    def local(pl, st):  # (K, n_loc), (K,)
+        k = pl.shape[0]
+        zf = _local_draw(spec, pl, st, qbits)
+        nc = _num_chunks(spec, k)
+        rpc = -(-spec.m_pad_loc // nc)
+
+        def one(c):
+            gidx, vals = _chunk_rows(spec, c, rpc)
+            return jax.lax.map(
+                lambda z: jnp.sum(vals * z[gidx], axis=-1), zf
+            )  # (K, rpc)
+
+        w = jax.lax.map(one, jnp.arange(nc))  # (nc, K, rpc)
+        w = jnp.moveaxis(w, 1, 0).reshape(k, -1)[:, : spec.m_blk]
+        return jnp.moveaxis(w.reshape(k, *loc_moved), 1, a + 1)
+
+    return _shard_map(local, (P(None, AXIS), P()), _out_spec_b(spec))(
+        Pr, jnp.asarray(steps, jnp.uint32)
+    )
+
+
+# ---------------------------------------------------------------------------
 # Plan-path transpose: shard-local gather over the cached plan slabs.
 # ---------------------------------------------------------------------------
 

@@ -39,6 +39,23 @@ score slab.  Callers encode an f32 init state once with
 drivers.  The encode dither word is derived from (round key,
 round_index) only, so the fit ≡ R-sequential-rounds equivalence holds
 per codec.
+
+Streaming + host staging (``FederatedConfig.stream_chunk``, the
+unbounded-K mode): ``federated_fit``'s scanned round body reroutes to
+the chunk-fold accumulator automatically when the config streams — the
+(R, K, E, ...) batch slab is still prefetched whole, but no round ever
+materializes a (K, lanes) upload slab.  ``streamed_federated_fit`` is
+the production-shaped driver on top: it consumes a host-side
+``data.cohort_batch_stream`` round by round and DOUBLE-BUFFERS the
+upload pipeline — round t+1's cohort slab is ``jax.device_put`` while
+round t's dispatched computation still runs (JAX dispatch is async;
+the loop never blocks between rounds), so host→device staging
+overlaps device compute and peak device residency is two cohort slabs
++ one chunk of uploads, independent of R and K.  Round r uses key
+``split(key, R)[r]`` and ``round_index=r`` — the SAME derivation as
+``federated_fit``'s scan — so the two drivers are numerically
+identical rounds-for-rounds (bit-identical scores; see
+tests/test_streaming.py).
 """
 
 from __future__ import annotations
@@ -118,6 +135,67 @@ def federated_fit(
         return state, metrics
 
     return jax.lax.scan(body, state, xs)
+
+
+def streamed_federated_fit(
+    zspecs: ZamplingSpecs,
+    state: Dict[str, Any],
+    loss_fn: LossFn,
+    stream,  # data.cohort_batch_stream iterator: (ids, weights, x, y)
+    key,
+    cfg: FederatedConfig,
+    rounds: int,
+    opt: Optional[Optimizer] = None,
+    faults=None,  # static FaultPlan (repro.fault)
+):
+    """R rounds driven from a host-side cohort stream with
+    double-buffered device staging.
+
+    Each round is one jitted ``federated_round`` call (compiled once
+    for the cohort shape).  While round t's computation is dispatched
+    and running on the device, round t+1's cohort — ids, weights, and
+    the (K, E, B, ...) batch slab — is already being ``jax.device_put``
+    from the host: the loop issues the transfer immediately after the
+    dispatch and never calls ``block_until_ready`` in between, so
+    staging rides under compute.  Combine with ``cfg.stream_chunk`` to
+    bound upload memory too: then no (K, lanes) slab exists anywhere
+    in the pipeline.
+
+    Returns (state', metrics) with metrics stacked to (R,) — the same
+    contract, key derivation (``split(key, R)[r]``, ``round_index=r``),
+    and therefore bit-identical scores as ``federated_fit`` over the
+    stacked slabs of the same stream.
+    """
+    keys = jax.random.split(key, rounds)
+    rids = jnp.arange(rounds, dtype=jnp.uint32)
+
+    @jax.jit
+    def one_round(state, batch, key, rid, ids, weights):
+        return federated_round(
+            zspecs, state, loss_fn, batch, key, cfg, opt,
+            round_index=rid, client_ids=ids, weights=weights,
+            faults=faults,
+        )
+
+    def stage(item):
+        ids, weights, x, y = item
+        return jax.device_put((
+            jnp.asarray(ids).astype(jnp.uint32),
+            jnp.asarray(weights).astype(jnp.uint32),
+            {"x": jnp.asarray(x), "y": jnp.asarray(y)},
+        ))
+
+    nxt = stage(next(stream))
+    metrics = []
+    for r in range(rounds):
+        ids, weights, batch = nxt
+        state, m = one_round(state, batch, keys[r], rids[r], ids,
+                             weights)
+        # stage round r+1 while round r computes (async dispatch)
+        if r + 1 < rounds:
+            nxt = stage(next(stream))
+        metrics.append(m)
+    return state, jax.tree.map(lambda *xs: jnp.stack(xs), *metrics)
 
 
 def sharded_client_fit(

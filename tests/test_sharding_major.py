@@ -127,6 +127,85 @@ class TestShardMapPath:
         np.testing.assert_allclose(got_b[0], want, rtol=1e-5, atol=1e-5)
 
 
+class TestShardedLocalDraw:
+    """The fused sharded forward draws only the shard's own windows
+    (coords offset by ``sid * n_loc``) — bit-identical to drawing the
+    replicated (n,) mask and re-slicing, for the f32 and quantized
+    downlink paths, single and K-stacked, and through the public op."""
+
+    def _spec(self):
+        return make_qspec(0, (8, 6, 16), 16, compression=2.0, d=4,
+                          window=32, seed=3, major_axis=2, shard_count=4)
+
+    def test_local_draw_matches_replicated_draw(self):
+        from repro.core.sampling import sample_mask_hash
+        from repro.kernels.qz_sharded import (
+            sharded_reconstruct,
+            sharded_sample_reconstruct,
+        )
+
+        spec = self._spec()
+        p = jnp.asarray(np.random.RandomState(0).rand(spec.n), jnp.float32)
+        step = jnp.uint32(77)
+        with _model_mesh():
+            z = sample_mask_hash(p, spec.seed, spec.tensor_id, step)
+            want = np.asarray(sharded_reconstruct(spec, z, 4))
+            got = np.asarray(sharded_sample_reconstruct(spec, p, step, 4))
+        np.testing.assert_array_equal(got, want)
+
+    def test_local_draw_batched_and_quantized(self):
+        from repro.core.sampling import sample_mask_hash, sample_mask_qhash
+        from repro.kernels.qz_sharded import (
+            sharded_reconstruct,
+            sharded_reconstruct_batched,
+            sharded_sample_reconstruct,
+            sharded_sample_reconstruct_batched,
+        )
+
+        spec = self._spec()
+        k = 5
+        Pr = jnp.asarray(np.random.RandomState(1).rand(k, spec.n),
+                         jnp.float32)
+        steps = jnp.arange(10, 10 + k, dtype=jnp.uint32)
+        q = jnp.asarray((np.random.RandomState(2).rand(spec.n) * 255)
+                        .astype(np.uint8))
+        with _model_mesh():
+            Z = sample_mask_hash(Pr, spec.seed, spec.tensor_id, steps)
+            want_b = np.asarray(sharded_reconstruct_batched(spec, Z, 4))
+            got_b = np.asarray(
+                sharded_sample_reconstruct_batched(spec, Pr, steps, 4))
+            zq = sample_mask_qhash(q, 8, spec.seed, spec.tensor_id,
+                                   jnp.uint32(77))
+            want_q = np.asarray(sharded_reconstruct(spec, zq, 4))
+            got_q = np.asarray(sharded_sample_reconstruct(
+                spec, q.astype(jnp.uint32), jnp.uint32(77), 4, qbits=8))
+        np.testing.assert_array_equal(got_b, want_b)
+        np.testing.assert_array_equal(got_q, want_q)
+
+    def test_public_fused_op_uses_local_draw(self):
+        from repro.core.sampling import sample_mask_hash
+        from repro.kernels import ops
+        from repro.kernels.qz_sharded import (
+            sharded_reconstruct,
+            sharded_reconstruct_batched,
+        )
+
+        spec = self._spec()
+        Pr = jnp.asarray(np.random.RandomState(3).rand(2, spec.n),
+                         jnp.float32)
+        steps = jnp.asarray([4, 9], jnp.uint32)
+        with _model_mesh():
+            Z = sample_mask_hash(Pr, spec.seed, spec.tensor_id, steps)
+            want = np.asarray(sharded_reconstruct(spec, Z[0], 4))
+            want_b = np.asarray(sharded_reconstruct_batched(spec, Z, 4))
+            got = np.asarray(ops.sample_reconstruct(
+                spec, Pr[0], steps[0], model_size=4))
+            got_b = np.asarray(ops.sample_reconstruct_batched(
+                spec, Pr, steps, model_size=4))
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got_b, want_b)
+
+
 def test_autodiff_through_reconstruct_sc():
     spec = make_qspec(0, (8, 6, 16), 16, compression=2.0, d=4, window=32,
                       seed=5, major_axis=2, shard_count=4)
