@@ -945,6 +945,202 @@ def bench_downlink_tradeoff(full=False):
     return rows
 
 
+def bench_serve(full=False):
+    """Zampling-native serving: dense vs reconstruct-on-load vs
+    streaming (this PR's tentpole), plus the delta broadcast.
+
+    ``serve_decode`` rows: tokens/sec and resident zampled-state bytes
+    per serving mode at two model sizes.  Bit-exactness is asserted
+    PRE-TIMING: streaming and load generations must agree bit for bit
+    at every size (and per-step across all three downlink codecs at
+    the small size) — the modes share the canonical serve contraction
+    (kernels/ops.py), so the resident-bytes win carries zero output
+    risk.  All timings are CPU; the streaming impl timed is 'chunked'
+    (the jnp fallback) and the one interpret-mode Pallas row is keyed
+    ``impl='u8_pallas_interpret'`` with ``regression_comparable:
+    False`` (interpreter artifact, not kernel perf — same convention
+    as kernel_qz_reconstruct).  The dense row serves the SAME sampled
+    weights through model.decode_step — the no-zampling baseline.
+
+    ``serve_delta`` rows: exact delta-vs-full broadcast bytes on a
+    converged-round scenario (1% of scores move, re-encoded under the
+    SAME dither word per the comm/downlink.py reuse rule), one row per
+    codec; asserts delta_bytes <= full_bytes / 8 AND that apply_delta
+    on a live state reproduces the fresh round t+1 state bitwise.
+    Rows land in BENCH_reconstruct.json keyed (bench, K=d_model,
+    strategy=mode, impl=codec); scripts/ci.sh gates on the byte
+    columns.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_arch
+    from repro.core import ZamplingConfig, build_specs, init_state
+    from repro.core.zampling import sample_weights
+    from repro.models import build_model
+    from repro.serve import (apply_delta, build_serve_engine, delta_report,
+                             generate, make_delta, make_generator,
+                             make_serve_state)
+
+    small = get_arch("qwen2-0.5b").reduced()
+    large = dataclasses.replace(small, name="qwen2-0.5b-r512",
+                                d_model=512, d_ff=1024)
+    prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+    new_tokens = 6 if full else 4
+    B, Sp = prompt.shape
+    seq_len = Sp + new_tokens
+    rows = []
+
+    for cfg in (small, large):
+        model = build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        zspecs = build_specs(params, ZamplingConfig(compression=8, d=8,
+                                                    min_size=2048))
+        state = init_state(jax.random.PRNGKey(1), zspecs,
+                           dense_init=params)
+        sstate = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                                  downlink="u8")
+
+        # bit-exactness oracle before any timing: streaming == load,
+        # full generation; per-step across all codecs at small size
+        outs = {}
+        for mode in ("load", "streaming"):
+            engine = build_serve_engine(model, sstate, mode=mode)
+            run = make_generator(engine.step, new_tokens)
+            toks, _ = run(engine.arrays_of(sstate),
+                          engine.init_cache(B, seq_len), prompt,
+                          jax.random.PRNGKey(0))
+            outs[mode] = toks
+        assert (outs["load"] == outs["streaming"]).all(), \
+            f"serve modes diverge at d_model={cfg.d_model}"
+        if cfg is small:
+            for codec in ("f32", "u16", "u8"):
+                ss = make_serve_state(zspecs, state,
+                                      jax.random.PRNGKey(2),
+                                      downlink=codec)
+                es = build_serve_engine(model, ss, mode="streaming")
+                el = build_serve_engine(model, ss, mode="load")
+                c0 = es.init_cache(B, seq_len)
+                ls, _ = jax.jit(es.step)(es.arrays_of(ss), c0,
+                                         prompt[:, :1])
+                ll, _ = jax.jit(el.step)(el.arrays_of(ss), c0,
+                                         prompt[:, :1])
+                assert (ls == ll).all(), f"codec {codec} diverges"
+
+        # sampled dense weights = the same model a no-zampling fleet
+        # would hold; serves through model.decode_step
+        dense_params = sample_weights(zspecs, state, jax.random.PRNGKey(2))
+
+        def _time(fn):
+            fn()  # compile
+            t0 = time.perf_counter()
+            fn()
+            return (time.perf_counter() - t0)
+
+        zamp_bytes = {
+            "dense": 4 * zspecs.m_total,
+            "load": sstate.loaded_zampled_bytes(),
+            "streaming": sstate.resident_zampled_bytes(),
+        }
+        for mode in ("dense", "load", "streaming"):
+            if mode == "dense":
+                dt = _time(lambda: generate(
+                    model, dense_params, prompt, new_tokens,
+                    seq_len=seq_len).block_until_ready())
+            else:
+                engine = build_serve_engine(model, sstate, mode=mode)
+                arrays = engine.arrays_of(sstate)
+                run = make_generator(engine.step, new_tokens)
+                cache = engine.init_cache(B, seq_len)
+                dt = _time(lambda: run(arrays, cache, prompt,
+                                       jax.random.PRNGKey(0)
+                                       )[0].block_until_ready())
+            tok_s = B * new_tokens / dt
+            rows.append({
+                "bench": "serve_decode", "K": cfg.d_model,
+                "strategy": mode,
+                "impl": "dense" if mode == "dense" else "u8",
+                "tok_s": tok_s, "us": dt / (B * new_tokens) * 1e6,
+                "resident_zampled_bytes": zamp_bytes[mode],
+                "dense_bytes": sstate.dense_bytes(),
+                "m_total": zspecs.m_total, "n_total": zspecs.n_total,
+                "bit_exact_vs_load": mode != "dense",
+                "regression_comparable": True,
+            })
+            _emit(f"serve_decode_{mode}_d{cfg.d_model}",
+                  dt / (B * new_tokens) * 1e6,
+                  f"tok_s={tok_s:.2f}"
+                  f";zampled_bytes={zamp_bytes[mode]}")
+
+        if cfg is small:
+            # one interpret-mode Pallas step: correctness-path timing
+            # only (the interpreter walks the one-hot contraction), so
+            # the row is excluded from perf regression comparisons
+            engine = build_serve_engine(model, sstate, mode="streaming",
+                                        impl="pallas")
+            arrays = engine.arrays_of(sstate)
+            cache = engine.init_cache(B, seq_len)
+            stepf = jax.jit(engine.step)
+            dt = _time(lambda: stepf(arrays, cache, prompt[:, :1]
+                                     )[0].block_until_ready())
+            rows.append({
+                "bench": "serve_decode", "K": cfg.d_model,
+                "strategy": "streaming",
+                "impl": "u8_pallas_interpret",
+                "tok_s": B / dt, "us": dt / B * 1e6,
+                "resident_zampled_bytes": zamp_bytes["streaming"],
+                "dense_bytes": sstate.dense_bytes(),
+                "m_total": zspecs.m_total, "n_total": zspecs.n_total,
+                "bit_exact_vs_load": True,
+                "regression_comparable": False,
+            })
+            _emit(f"serve_decode_streaming_pallas_d{cfg.d_model}",
+                  dt / B * 1e6, "interpret-mode;not-comparable")
+
+    # --- delta broadcast on a converged round ----------------------------
+    model = build_model(small)
+    params = model.init_params(jax.random.PRNGKey(0))
+    zspecs = build_specs(params, ZamplingConfig(compression=8, d=8,
+                                                min_size=2048))
+    state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=params)
+    key = jax.random.PRNGKey(7)
+    scores2 = {}
+    for p, s in state["scores"].items():
+        k1, k2, key = jax.random.split(key, 3)
+        touch = jax.random.bernoulli(k1, 0.01, s.shape)
+        scores2[p] = jnp.where(
+            touch, s + 0.05 * jax.random.normal(k2, s.shape), s)
+    state2 = {"scores": scores2, "dense": state["dense"]}
+    for codec in ("f32", "u16", "u8"):
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        s2 = make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        swapped = apply_delta(s1, make_delta(s1, s2))
+        assert all(bool((swapped.words[p] == s2.words[p]).all())
+                   for p in s2.words), f"hot-swap != fresh load ({codec})"
+        rep = delta_report(s1, s2)
+        assert rep["delta_bytes"] < rep["full_bytes"], codec
+        assert rep["delta_vs_full"] <= 0.125, \
+            f"delta {rep['delta_vs_full']:.4f} > 1/8 ({codec})"
+        rows.append({
+            "bench": "serve_delta", "strategy": codec,
+            "words_total": rep["words_total"],
+            "words_changed": rep["words_changed"],
+            "delta_bytes": rep["delta_bytes"],
+            "full_bytes": rep["full_bytes"],
+            "delta_vs_full": rep["delta_vs_full"],
+            "changed_frac": 0.01,
+            "regression_comparable": True,
+        })
+        _emit(f"serve_delta_{codec}", 0.0,
+              f"delta={rep['delta_bytes']}B;full={rep['full_bytes']}B"
+              f";ratio={rep['delta_vs_full']:.4f}")
+    return rows
+
+
 BENCHES = {
     "kernel": lambda full: bench_kernel_reconstruct(),
     "fedround": bench_federated_round,
@@ -955,6 +1151,7 @@ BENCHES = {
     "downlink": bench_downlink,
     "faults": bench_faults,
     "streaming": bench_streaming,
+    "serve": bench_serve,
     "wire_formats": bench_wire_formats,
     "downlink_tradeoff": bench_downlink_tradeoff,
     "table1": bench_table1,
@@ -980,7 +1177,8 @@ def main() -> None:
             rows = BENCHES[name](args.full)
             _dump(name, rows)
             if name in ("kernel", "fedround", "fused", "bwd", "threshold",
-                        "wire", "downlink", "faults", "streaming"):
+                        "wire", "downlink", "faults", "streaming",
+                        "serve"):
                 _merge_bench_root(rows)
         except Exception as e:  # noqa: BLE001
             _emit(name, 0.0, f"ERROR:{e}")

@@ -1,20 +1,55 @@
 """Serve a generative LM from the COMPRESSED Zampling artifact.
 
-The deployment object is (Q seed, z bits, dense leaves) — ~m/32 bits of
-model state. Weights are reconstructed once on load (w = Q z) and the
-model serves batched greedy generation through the KV-cache decode path
-(the same serve_step the 32k/500k dry-runs lower at production scale).
+The deployment object is the encoded score broadcast (u8/u16 wire
+words or f32 scores) + dense leaves + one uint32 draw word.  Two ways
+to decode against it:
 
-  PYTHONPATH=src python examples/serve_compressed.py
+  --mode load       reconstruct w = Q Bern(f(s)) once, serve resident
+                    f32 tensors (the PR-5-era trade);
+  --mode streaming  never materialize a weight: every decode linear
+                    regenerates its (window, bm) block inside the
+                    contraction (kernels.ops serve section).  Bit-
+                    identical logits, ~codec.bits/32 of the resident
+                    zampled bytes.
+
+With --delta, a synthetic converged round (1% of scores move) is
+re-encoded under the SAME dither word and shipped as an XOR word
+delta, hot-swapping the live server; the table shows delta-vs-full
+broadcast bytes per codec.
+
+  PYTHONPATH=src python examples/serve_compressed.py \
+      --mode streaming --delta
 """
+
+import argparse
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.core import ZamplingConfig, build_specs, init_state, sample_masks
+from repro.serve import (
+    apply_delta,
+    build_serve_engine,
+    delta_report,
+    make_delta,
+    make_generator,
+    make_serve_state,
+    serve_from_compressed,
+)
 from repro.models import build_model
-from repro.serve import generate, serve_from_compressed
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--mode", choices=["load", "streaming"],
+                    default="streaming",
+                    help="serving mode for the timed generation")
+parser.add_argument("--delta", action="store_true",
+                    help="also demo the XOR delta hot-swap round update")
+parser.add_argument("--codec", choices=["f32", "u16", "u8"], default="u8",
+                    help="downlink codec carried by the serving state")
+parser.add_argument("--new-tokens", type=int, default=8)
+args = parser.parse_args()
 
 cfg = get_arch("qwen2-0.5b").reduced()
 model = build_model(cfg)
@@ -34,7 +69,73 @@ print(f"compressed artifact: {mask_bits/8/1024:.1f} KiB of masks for "
 prompt = jnp.asarray([[5, 17, 42, 7], [1, 2, 3, 4]], jnp.int32)
 out = serve_from_compressed(model, zspecs, masks, state["dense"], prompt,
                             max_new_tokens=8, seq_len=32)
-print("batched generation:")
+print("batched generation (legacy mask artifact, reconstruct-on-load):")
 for row in out.tolist():
     print("  ", row)
-print("(weights never left the (seed, z) representation until load)")
+
+# --- the Zampling-native serving state -----------------------------------
+sstate = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                          downlink=args.codec, dither_word=0)
+B, Sp = prompt.shape
+seq_len = Sp + args.new_tokens
+
+print(f"\nresident zampled state ({args.codec} codec) and decode "
+      f"throughput, mode={args.mode} timed:")
+print(f"  {'mode':<11} {'resident KiB':>12} {'tok/s':>10}")
+rows = {}
+for mode in ("load", "streaming"):
+    engine = build_serve_engine(model, sstate, mode=mode)
+    arrays = engine.arrays_of(sstate)
+    run = make_generator(engine.step, args.new_tokens)
+    cache = engine.init_cache(B, seq_len)
+    toks, _ = run(arrays, cache, prompt, jax.random.PRNGKey(0))
+    toks.block_until_ready()  # compile + correctness reference
+    rows[mode] = toks
+    resident = (sstate.loaded_zampled_bytes() if mode == "load"
+                else sstate.resident_zampled_bytes())
+    if mode == args.mode:
+        t0 = time.perf_counter()
+        out2, _ = run(arrays, cache, prompt, jax.random.PRNGKey(0))
+        out2.block_until_ready()
+        dt = time.perf_counter() - t0
+        tps = f"{B * args.new_tokens / dt:10.1f}"
+    else:
+        tps = f"{'-':>10}"
+    print(f"  {mode:<11} {resident/1024:12.1f} {tps}")
+assert (rows["load"] == rows["streaming"]).all(), "modes must agree bitwise"
+print("  (modes verified bit-identical; dense leaves "
+      f"{sstate.dense_bytes()/1024:.1f} KiB in all modes)")
+
+if args.delta:
+    print("\ndelta hot-swap (synthetic converged round: 1% of scores move):")
+    key = jax.random.PRNGKey(7)
+    scores2 = {}
+    for p, s in state["scores"].items():
+        k1, k2, key = jax.random.split(key, 3)
+        touch = jax.random.bernoulli(k1, 0.01, s.shape)
+        scores2[p] = jnp.where(
+            touch, s + 0.05 * jax.random.normal(k2, s.shape), s)
+    state2 = {"scores": scores2, "dense": state["dense"]}
+    print(f"  {'codec':<6} {'changed':>8} {'delta KiB':>10} "
+          f"{'full KiB':>9} {'ratio':>7}")
+    for codec in ("f32", "u16", "u8"):
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        s2 = make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        rep = delta_report(s1, s2)
+        print(f"  {codec:<6} {rep['words_changed']:>8} "
+              f"{rep['delta_bytes']/1024:10.1f} "
+              f"{rep['full_bytes']/1024:9.1f} "
+              f"{rep['delta_vs_full']:7.4f}")
+    swapped = apply_delta(sstate, make_delta(
+        sstate, make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                                 downlink=args.codec, dither_word=0)))
+    engine = build_serve_engine(model, sstate, mode=args.mode)
+    run = make_generator(engine.step, args.new_tokens)
+    cache = engine.init_cache(B, seq_len)
+    t1, _ = run(engine.arrays_of(swapped), cache, prompt,
+                jax.random.PRNGKey(0))
+    print("  post-swap generation (same compiled step, new words):")
+    for row in jnp.concatenate([prompt, t1], axis=1).tolist():
+        print("  ", row)

@@ -173,10 +173,75 @@ if not big or big[0]["slab_upload_bytes"] / big[0]["peak_upload_bytes"] < 5:
 print(f"  ok: {len(strm)} streaming rows, K={sorted(ks)}, K=10 overhead "
       f"{max(r['stream_overhead'] for r in strm if r['K'] == 10):.3f}x, "
       f"peak flat per chunk")
+
+# serve_decode rows: dense / load / streaming must be measured at both
+# model widths (K = d_model in {256, 512}); the streaming mode's
+# resident zampled bytes must stay strictly below the load mode's (the
+# tentpole claim — never materialize a weight), with at least a 4x
+# reduction at the largest width.  Rows with regression_comparable:
+# false (the interpret-mode Pallas step) are excluded from every
+# comparison, same convention as kernel_qz_reconstruct.
+SERVE_KEYS = {"us", "tok_s", "resident_zampled_bytes", "dense_bytes",
+              "strategy", "impl", "K"}
+srv = [r for r in rows if r.get("bench") == "serve_decode"
+       and r.get("regression_comparable", True)]
+ks = {r.get("K") for r in srv}
+strat = {r.get("strategy") for r in srv}
+bad = [r for r in srv if not SERVE_KEYS <= set(r)]
+if not {256, 512} <= ks or not {"dense", "load", "streaming"} <= strat \
+        or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: serve_decode rows for "
+             f"K={sorted(ks)} (need 256 and 512), strategies "
+             f"{sorted(strat)} (need dense, load, streaming); rows "
+             f"missing keys: {bad}. Run `python -m benchmarks.run "
+             f"--only serve` and commit.")
+by_mode = {}
+for r in srv:
+    by_mode[(r["strategy"], r["K"])] = r
+for k in sorted(ks):
+    stream = by_mode[("streaming", k)]
+    load = by_mode[("load", k)]
+    if stream["resident_zampled_bytes"] >= load["resident_zampled_bytes"]:
+        sys.exit(f"streaming resident zampled bytes "
+                 f"{stream['resident_zampled_bytes']} not below load's "
+                 f"{load['resident_zampled_bytes']} at K={k} — the "
+                 f"decode-time reconstruction no longer saves memory")
+kmax = max(ks)
+ratio = (by_mode[("load", kmax)]["resident_zampled_bytes"]
+         / by_mode[("streaming", kmax)]["resident_zampled_bytes"])
+if ratio < 4:
+    sys.exit(f"streaming resident reduction collapsed to {ratio:.2f}x at "
+             f"K={kmax} (need >= 4x)")
+if not all(r.get("bit_exact_vs_load") for r in srv
+           if r["strategy"] == "streaming"):
+    sys.exit("serve_decode streaming rows lost the bit_exact_vs_load "
+             "attestation — the pre-timing equality assert was skipped")
+print(f"  ok: {len(srv)} serve rows, K={sorted(ks)}, streaming resident "
+      f"{ratio:.1f}x below load at K={kmax}")
+
+# serve_delta rows: the XOR round update must be metered for every
+# codec and must undercut the full broadcast by at least 8x on the
+# converged-round scenario, or the hot-swap path has regressed into
+# re-broadcasting.
+DELTA_KEYS = {"words_total", "words_changed", "delta_bytes", "full_bytes",
+              "delta_vs_full", "strategy"}
+dlt = [r for r in rows if r.get("bench") == "serve_delta"]
+codecs = {r.get("strategy") for r in dlt}
+bad = [r for r in dlt if not DELTA_KEYS <= set(r)]
+fat = [r for r in dlt if r.get("delta_bytes", 1 << 60)
+       >= r.get("full_bytes", 0) or r.get("delta_vs_full", 1) > 0.125]
+if not {"f32", "u16", "u8"} <= codecs or bad or fat:
+    sys.exit(f"BENCH_reconstruct.json is stale or regressed: serve_delta "
+             f"codecs {sorted(codecs)} (need f32, u16, u8); rows missing "
+             f"keys: {bad}; delta >= full broadcast or > 1/8 of it: "
+             f"{fat}. Run `python -m benchmarks.run --only serve` and "
+             f"commit.")
+print(f"  ok: {len(dlt)} delta rows, codecs {sorted(codecs)}, worst "
+      f"delta/full {max(r['delta_vs_full'] for r in dlt):.4f}")
 EOF
 
-echo "== reconstruction + fused + bwd + wire + downlink + fault + streaming benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults,streaming
+echo "== reconstruction + fused + bwd + wire + downlink + fault + streaming + serve benchmarks -> BENCH_reconstruct.json =="
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults,streaming,serve
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -218,4 +283,14 @@ for r in rows:
               f"{r['peak_upload_bytes']/1024:.0f}KiB vs slab "
               f"{r['slab_upload_bytes']/1024:.0f}KiB "
               f"({r['slab_vs_peak']:.1f}x)")
+    elif r.get("bench") == "serve_decode":
+        tag = "" if r.get("regression_comparable", True) else "  [interpret]"
+        print(f"  serve {r['strategy']:>9} d={r['K']:>3}: "
+              f"{r['tok_s']:6.2f} tok/s  resident "
+              f"{r['resident_zampled_bytes']/1024:8.0f}KiB{tag}")
+    elif r.get("bench") == "serve_delta":
+        print(f"  sdelta {r['strategy']:>8}: changed "
+              f"{r['words_changed']:>6}/{r['words_total']} words  "
+              f"delta {r['delta_bytes']:>8}B vs full {r['full_bytes']:>8}B "
+              f"({r['delta_vs_full']:.4f}x)")
 EOF

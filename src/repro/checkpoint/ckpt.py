@@ -3,6 +3,17 @@
 A Zampling checkpoint is tiny by construction: the Q matrix is never
 stored (it regenerates from ``meta['q_seed']``), so the artifact is the
 score vectors (n floats ~ m/32), dense leaves, and optimizer state.
+
+A state that carries an ENCODED score vector (the u8/u16 downlink
+codec words — see ``comm/downlink.py``) round-trips at its wire dtype:
+``save_checkpoint`` records every leaf's dtype in the meta sidecar and
+``load_checkpoint`` restores the SAVED dtype, never the template's.
+Casting to the template (the old behavior) silently widened a u8
+carry to the caller's f32 template — a 4x artifact blow-up AND a
+corruption: wire words reinterpreted as probabilities.  The template
+fixes only the tree STRUCTURE.  Tag the codec via
+``meta={'downlink': codec.name}`` so a loader can route the words
+without sniffing dtypes.
 """
 
 from __future__ import annotations
@@ -13,6 +24,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+_DTYPES_KEY = "__leaf_dtypes__"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -30,25 +43,34 @@ def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = _flatten(tree)
     np.savez_compressed(path, **arrays)
+    meta = dict(meta or {})
+    meta[_DTYPES_KEY] = {k: str(v.dtype) for k, v in arrays.items()}
     with open(path + ".meta.json", "w") as f:
-        json.dump(meta or {}, f, indent=2, default=str)
+        json.dump(meta, f, indent=2, default=str)
 
 
 def load_checkpoint(path: str, template: Any) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``template``."""
+    """Restore into the STRUCTURE of ``template`` at the SAVED dtypes.
+
+    The saved dtype comes from the meta sidecar (old sidecars without
+    the dtype record fall back to the npz arrays' own dtypes, which
+    ``np.savez`` preserves anyway) — an encoded u8/u16 score carry
+    comes back as wire words even when the template holds f32 scores.
+    """
     data = np.load(path if path.endswith(".npz") else path + ".npz")
+    meta = {}
+    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    dtypes = meta.pop(_DTYPES_KEY, {})
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in flat:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in p)
         arr = data[key]
-        if hasattr(leaf, "dtype"):
-            arr = arr.astype(leaf.dtype)
+        if key in dtypes:
+            arr = arr.astype(np.dtype(dtypes[key]))
         leaves.append(arr)
-    meta = {}
-    meta_path = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
-    if os.path.exists(meta_path):
-        with open(meta_path) as f:
-            meta = json.load(f)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta

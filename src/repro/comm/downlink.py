@@ -43,6 +43,29 @@ Registered codecs: ``f32`` (identity — the bit-exact oracle; a
 ``u16`` and ``u8`` (16/8 bits per coordinate, 2x/4x downlink
 reduction).  ``comm.metering`` meters whichever codec the round
 configures, exactly.
+
+DELTA WIRE FORMAT (serve.delta — the serving fleet's round update).
+A serving node already holds round t's word vector, so round t+1
+broadcasts only the XOR of the two rounds' word bit patterns (f32
+words bitcast to uint32 first): zero where unchanged, involutive to
+apply.  On the wire each leaf ships the cheaper of
+
+    bitmap:     ceil(n/8) presence bits  + changed · (bits/8)
+    coord list: 4-byte count             + changed · (4 + bits/8)
+
+plus one 4-byte draw word for the update (``comm.metering
+.delta_wire_bytes`` is the exact accounting; a full broadcast is
+``downlink_bits_per_client(n)/8``).  The format leans on a DITHER
+REUSE rule: the encode dither is keyed by ``word`` (above), so a
+server that re-encodes each round under a FRESH word re-dithers every
+coordinate and flips ~half the quantized words even when no score
+moved — deltas degenerate to full broadcasts.  Serving encoders must
+pin one dither word across rounds (``serve.state.make_serve_state``'s
+``dither_word``); then an unchanged probability re-encodes to an
+unchanged word and the delta is supported exactly on the coordinates
+the aggregate actually moved.  Training rounds keep the per-round
+word — the reuse rule is a serving-wire convention, not a change to
+the federated protocol.
 """
 
 from __future__ import annotations

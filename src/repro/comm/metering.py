@@ -54,6 +54,31 @@ def score_downlink_bytes(codec: DownlinkCodec, n: int) -> int:
     return -(-codec.downlink_bits_per_client(n) // 8)
 
 
+def delta_wire_bytes(total_words: int, changed_words: int,
+                     word_bytes: int) -> int:
+    """Exact wire bytes of a sparse word delta (serve.delta).
+
+    The broadcaster picks the cheaper of the two standard encodings of
+    "these positions changed, here are their new words":
+
+      bitmap:     ceil(total/8) presence bits + changed · word_bytes
+      coord list: 4-byte count  + changed · (4 + word_bytes)
+
+    Both are exact byte counts of a canonical serialization, mirroring
+    ``mask_uplink_bytes`` / ``score_downlink_bytes`` — no entropy-coding
+    optimism.  A full broadcast is ``total · word_bytes``
+    (``score_downlink_bytes`` of the codec); the delta wins whenever
+    few words changed, which is the converged-round regime.
+    """
+    if changed_words < 0 or changed_words > total_words:
+        raise ValueError(
+            f"changed_words={changed_words} outside [0, {total_words}]"
+        )
+    bitmap = -(-total_words // 8) + changed_words * word_bytes
+    coords = 4 + changed_words * (4 + word_bytes)
+    return min(bitmap, coords)
+
+
 def round_wire_report(zspecs, aggregate: str, num_clients: int,
                       mode: str = "sample",
                       downlink: str = "f32") -> Dict[str, float]:
@@ -188,7 +213,8 @@ def downlink_table(zspecs, num_clients: int,
 
 
 __all__ = [
-    "mask_uplink_bytes", "score_downlink_bytes", "round_wire_report",
+    "mask_uplink_bytes", "score_downlink_bytes", "delta_wire_bytes",
+    "round_wire_report",
     "realized_wire_metrics", "upload_slab_bytes", "streaming_peak_bytes",
     "wire_table", "downlink_table",
     "get_transport", "get_codec",

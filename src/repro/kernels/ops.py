@@ -81,7 +81,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.qspec import QSpec, padded_row_window, row_indices, row_values
-from ..core.sampling import sample_mask_hash, sample_mask_qhash
+from ..core.hashrng import bernoulli_u32
+from ..core.sampling import (
+    mask_u32,
+    quant_threshold_u24,
+    sample_mask_hash,
+    sample_mask_qhash,
+)
 from ..core.transpose_plan import (
     build_transpose_plan,
     plan_window_apply,
@@ -763,3 +769,361 @@ def sample_pack_batched(spec: QSpec, P, steps, *,
     impl = impl or _default_impl()
     return _pack_many(spec, P.astype(jnp.float32),
                       jnp.asarray(steps, jnp.uint32), impl)
+
+
+# ---------------------------------------------------------------------------
+# Streaming serve ops: y = x @ W_g with W_g never materialized.  The
+# decode-path contraction regenerates Q edges + mask bits per tile and
+# consumes the weight values in place, so a serving node's resident
+# zampled state is the ENCODED score broadcast alone (kernels.qz_decode
+# has the kernel story; serve.decode drives these per leaf).  Gradient-
+# free by design — serving never backprops.  Impl dispatch mirrors
+# reconstruct: 'chunked' (default; lax.scan over the canonical blocks,
+# bounds temporaries at O(bm·d)), 'pallas' (qz_decode kernels,
+# interpret on CPU), 'ref' (reconstruct-then-matmul oracle — the ONE
+# serve impl that does materialize W_g).  The REPRO_SERVE_IMPL env
+# override is read at trace time.
+#
+# CANONICAL CONTRACTION TREE.  Floating-point summation order is part
+# of the serve contract: XLA's ``jnp.dot`` reduction tree is
+# context-dependent (measured on CPU: mat-mat does not bitwise equal
+# its own ascending row-blocked partial sums, and at B=1 a vmapped
+# row dot differs from the stacked per-row dots), so "bit-identical
+# across impls" cannot lean on dot internals.  Instead every impl —
+# ref, chunked, and the Pallas kernels — contracts through ONE defined
+# tree: per (window, bm)-block in ascending grid order, the block's
+# rows scatter into an i-aligned (NI, d_out) weight tile (each cell a
+# single term, NI = bm//d_out + 2 static), and the accumulator takes
+# ``y += dot(x[i_lo:i_lo+NI], tile)``.  Identical dot shapes, operand
+# values, and add order at every step ⇒ identical bits by
+# construction (up to IEEE signed zeros in all-dead tile cells),
+# whatever the backend's dot does inside one tile.
+# ---------------------------------------------------------------------------
+
+_DEFAULT_SERVE_IMPL = "chunked"
+_VALID_SERVE_IMPLS = ("ref", "chunked", "pallas")
+
+# row-block size of the canonical serve tree; part of the bit-exactness
+# contract (a different bm is a different summation tree)
+SERVE_BM = 256
+
+
+def set_default_serve_impl(impl: str) -> None:
+    """Set the process-wide default serve impl."""
+    global _DEFAULT_SERVE_IMPL
+    if impl not in _VALID_SERVE_IMPLS:
+        raise ValueError(
+            f"unknown serve impl {impl!r}; valid impls: "
+            f"{', '.join(_VALID_SERVE_IMPLS)}"
+        )
+    _DEFAULT_SERVE_IMPL = impl
+
+
+def _default_serve_impl() -> str:
+    """Effective serve impl: ``REPRO_SERVE_IMPL`` env override (read at
+    trace time, mirroring ``REPRO_RECONSTRUCT_IMPL``), else the
+    process default."""
+    env = os.environ.get("REPRO_SERVE_IMPL")
+    if env is None:
+        return _DEFAULT_SERVE_IMPL
+    if env not in _VALID_SERVE_IMPLS:
+        raise ValueError(
+            f"REPRO_SERVE_IMPL={env!r} is not a valid impl; "
+            f"valid impls: {', '.join(_VALID_SERVE_IMPLS)}"
+        )
+    return env
+
+
+def serve_group_dims(spec: QSpec):
+    """(groups, d_in, d_out) of a spec's flat moved row space.
+
+    The serve ops address one GROUP (stacked layer) at a time: a
+    (L, d_in, d_out) leaf has L groups of contiguous rows, a 2-D leaf
+    one.  Requires the single-block identity row layout (shard_count
+    == 1, major_axis == 0) — the serving case; ``build_specs`` without
+    a shard plan always produces it.
+    """
+    if spec.shard_count != 1 or spec.major_axis != 0:
+        raise ValueError(
+            "serve ops address the single-block identity row layout "
+            f"(shard_count=1, major_axis=0); spec has shard_count="
+            f"{spec.shard_count}, major_axis={spec.major_axis}"
+        )
+    if len(spec.shape) < 2:
+        raise ValueError(f"serve ops need a >=2-D spec, got {spec.shape}")
+    if len(spec.shape) == 2:
+        return 1, spec.shape[0], spec.shape[1]
+    groups = spec.shape[0]
+    d_out = spec.shape[-1]
+    d_in = 1
+    for s in spec.shape[1:-1]:
+        d_in *= s
+    return groups, d_in, d_out
+
+
+def _serve_operand(spec: QSpec, words, qbits):
+    """Clip f32 scores to probabilities; pass wire words through."""
+    if qbits is None:
+        return jnp.clip(jnp.asarray(words).astype(jnp.float32), 0.0, 1.0)
+    return jnp.asarray(words).astype(jnp.uint32)
+
+
+def _serve_edge_weights(spec: QSpec, p, step, rows, qbits):
+    """Per-edge streamed weight values at flat rows ``rows`` (..., ).
+
+    Regenerates the rows' Q edges, draws each edge's mask bit straight
+    from the encoded score words at its global z coordinate, and
+    reduces over the degree axis — the same per-row expression as the
+    reconstruct kernels, so values are bit-identical to gathering the
+    materialized tensor.
+    """
+    rows = jnp.asarray(rows)
+    idx = row_indices(spec, rows)  # (..., d) in-window
+    vals = row_values(spec, rows, dtype=jnp.float32)
+    win = (rows // spec.rows_per_window).astype(jnp.int32)
+    coords = win[..., None] * spec.window + idx  # global z coords
+    u = mask_u32(spec.seed, spec.tensor_id, jnp.asarray(step, jnp.uint32),
+                 coords)
+    pw = jnp.take(p, coords.reshape(-1)).reshape(coords.shape)
+    if qbits is None:
+        bits = bernoulli_u32(u, pw)
+    else:
+        thr = quant_threshold_u24(pw, qbits)
+        bits = ((u >> np.uint32(8)) < thr).astype(jnp.float32)
+    return jnp.sum(vals * bits, axis=-1)
+
+
+def serve_tile_rows(bm: int, d_out: int) -> int:
+    """NI: i-rows a bm-row flat block can straddle (static tile height).
+
+    A contiguous run of ``bm`` flat rows starting mid-i-row touches at
+    most ``ceil((bm + d_out - 1) / d_out) <= bm // d_out + 2`` distinct
+    input rows of the (d_in, d_out) group.
+    """
+    return bm // d_out + 2
+
+
+def serve_block_grid(spec: QSpec, bm: int, row_offset: int, sub: int):
+    """(w0, nblocks, bpw): the canonical block enumeration for a group.
+
+    Only the windows overlapping rows [row_offset, row_offset + sub)
+    are visited — a stacked leaf costs one layer's blocks per call.
+    Blocks run in ascending (window, block) order; this order is part
+    of the bit-exactness contract.
+    """
+    bpw = max(1, -(-spec.rows_per_window // bm))
+    w0 = row_offset // spec.rows_per_window
+    w1 = (row_offset + sub - 1) // spec.rows_per_window
+    return w0, (w1 - w0 + 1) * bpw, bpw
+
+
+def _serve_contract_blocks(spec: QSpec, x, row_offset, d_in, d_out, bm,
+                           w_blk_fn):
+    """The canonical window-blocked contraction (see section comment).
+
+    ``w_blk_fn(rows (bm,) int32, live (bm,) bool) -> (bm,) f32`` yields
+    the block's weight values with exact +0.0 at dead rows.  Every
+    serve impl and the qz_decode kernels replay THIS tree — identical
+    tile shapes, operand values, and accumulation order — so their
+    float sums agree bit-for-bit.
+    """
+    sub = d_in * d_out
+    ni = serve_tile_rows(bm, d_out)
+    w0, nblk, bpw = serve_block_grid(spec, bm, row_offset, sub)
+    rpw = spec.rows_per_window
+    xf = x.astype(jnp.float32)
+    pad = ((0, 0), (0, ni)) if xf.ndim == 2 else ((0, ni),)
+    xpad = jnp.pad(xf, pad)
+    lane = jnp.arange(bm, dtype=jnp.int32)
+
+    def body(y, t):
+        j = t % bpw
+        bstart = (w0 + t // bpw) * rpw + j * bm
+        rows = bstart + lane
+        live = ((rows >= row_offset) & (rows < row_offset + sub)
+                & (j * bm + lane < rpw) & (rows < spec.m))
+        w_blk = w_blk_fn(rows, live)
+        i_lo = jnp.clip(bstart - row_offset, 0, sub - 1) // d_out
+        pos = jnp.where(live, rows - row_offset - i_lo * d_out,
+                        ni * d_out)
+        tile = jnp.zeros((ni * d_out,), jnp.float32)
+        tile = tile.at[pos].add(w_blk, mode="drop").reshape(ni, d_out)
+        if xf.ndim == 2:
+            xseg = jax.lax.dynamic_slice(xpad, (0, i_lo),
+                                         (xpad.shape[0], ni))
+        else:
+            xseg = jax.lax.dynamic_slice(xpad, (i_lo,), (ni,))
+        return (y + jnp.dot(xseg, tile,
+                            preferred_element_type=jnp.float32), None)
+
+    y0 = jnp.zeros(xf.shape[:-1] + (d_out,), jnp.float32)
+    y, _ = jax.lax.scan(body, y0, jnp.arange(nblk, dtype=jnp.int32))
+    return y
+
+
+def _serve_contract_chunked(spec: QSpec, p, step, x, row_offset, d_in,
+                            d_out, qbits, bm):
+    """Streaming jnp path: each canonical block regenerates its own
+    (bm,) weight values from the encoded words and is consumed by the
+    tile dot in place — peak temporaries O(bm·d), no W_g anywhere."""
+
+    def w_blk_fn(rows, live):
+        w = _serve_edge_weights(spec, p, step, rows, qbits)
+        return jnp.where(live, w, 0.0)
+
+    return _serve_contract_blocks(spec, x, row_offset, d_in, d_out, bm,
+                                  w_blk_fn)
+
+
+def _serve_contract_resident(spec: QSpec, W, x, row_offset, d_in, d_out,
+                             bm):
+    """Canonical blocked contraction against a MATERIALIZED leaf: the
+    reconstruct-on-load serving mode's linear (a tiled dense matmul —
+    the tiling pins the summation order the streaming impls replay)."""
+    Wf = jnp.pad(jnp.asarray(W).reshape(-1).astype(jnp.float32),
+                 (0, spec.rows_per_window + bm))
+
+    def w_blk_fn(rows, live):
+        return jnp.where(live, jnp.take(Wf, rows), 0.0)
+
+    return _serve_contract_blocks(spec, x, row_offset, d_in, d_out, bm,
+                                  w_blk_fn)
+
+
+def _serve_contract_ref(spec: QSpec, words, step, x, row_offset, d_in,
+                        d_out, qbits, bm):
+    """Reconstruct-then-matmul oracle: materializes the full leaf, then
+    contracts it through the resident (load-mode) path."""
+    W = sample_reconstruct(spec, words, step, qbits=qbits, impl="ref")
+    return _serve_contract_resident(spec, W, x, row_offset, d_in, d_out,
+                                    bm)
+
+
+def _serve_contract(spec, words, step, x, group, qbits, impl, bm):
+    groups, d_in, d_out = serve_group_dims(spec)
+    if not 0 <= group < groups:
+        raise ValueError(f"group {group} out of range [0, {groups})")
+    if x.shape[-1] != d_in:
+        raise ValueError(
+            f"activation has trailing dim {x.shape[-1]}, spec group "
+            f"expects d_in={d_in}"
+        )
+    row_offset = group * d_in * d_out
+    if impl == "ref":
+        return _serve_contract_ref(spec, words, step, x, row_offset,
+                                   d_in, d_out, qbits, bm)
+    p = _serve_operand(spec, words, qbits)
+    if impl == "pallas":
+        from .qz_decode import qz_sample_matmul, qz_sample_matvec
+
+        fn = qz_sample_matvec if x.ndim == 1 else qz_sample_matmul
+        return fn(spec, p, step, x, row_offset=row_offset, d_in=d_in,
+                  d_out=d_out, qbits=qbits, bm=bm)
+    return _serve_contract_chunked(spec, p, step, x, row_offset, d_in,
+                                   d_out, qbits, bm)
+
+
+def serve_matvec(spec: QSpec, words, step, x, *, group: int = 0,
+                 qbits: Optional[int] = None, impl: Optional[str] = None,
+                 bm: int = SERVE_BM):
+    """Streamed y = x @ W_g: encoded scores + x (d_in,) -> (d_out,).
+
+    ``words``: the serve-resident score state — f32 scores (clipped to
+    probabilities in-op) or the downlink codec's uint words with
+    ``qbits`` set.  ``step`` pins the mask draw; ``group`` selects the
+    stacked layer.  All impls contract through the canonical blocked
+    tree (section comment), so ref/chunked/pallas agree bit-for-bit;
+    'ref' IS reconstruct-then-matmul and anchors the exactness tests.
+    """
+    impl = impl or _default_serve_impl()
+    if impl not in _VALID_SERVE_IMPLS:
+        raise ValueError(
+            f"unknown serve impl {impl!r}; valid impls: "
+            f"{', '.join(_VALID_SERVE_IMPLS)}"
+        )
+    if x.ndim != 1:
+        raise ValueError(f"serve_matvec takes x (d_in,), got {x.shape}")
+    return _serve_contract(spec, words, step, x, int(group), qbits, impl,
+                           int(bm))
+
+
+def serve_matmul(spec: QSpec, words, step, X, *, group: int = 0,
+                 qbits: Optional[int] = None, impl: Optional[str] = None,
+                 bm: int = SERVE_BM):
+    """Streamed Y = X @ W_g for a (B, d_in) activation batch."""
+    impl = impl or _default_serve_impl()
+    if impl not in _VALID_SERVE_IMPLS:
+        raise ValueError(
+            f"unknown serve impl {impl!r}; valid impls: "
+            f"{', '.join(_VALID_SERVE_IMPLS)}"
+        )
+    if X.ndim != 2:
+        raise ValueError(f"serve_matmul takes X (B, d_in), got {X.shape}")
+    return _serve_contract(spec, words, step, X, int(group), qbits, impl,
+                           int(bm))
+
+
+def _serve_resident_dims(spec: QSpec, group: int, x):
+    groups, d_in, d_out = serve_group_dims(spec)
+    if not 0 <= group < groups:
+        raise ValueError(f"group {group} out of range [0, {groups})")
+    if x.shape[-1] != d_in:
+        raise ValueError(
+            f"activation has trailing dim {x.shape[-1]}, spec group "
+            f"expects d_in={d_in}"
+        )
+    return group * d_in * d_out, d_in, d_out
+
+
+def serve_resident_matvec(spec: QSpec, W, x, *, group: int = 0,
+                          bm: int = SERVE_BM):
+    """y = x @ W_g against a materialized leaf, canonical tree.
+
+    The reconstruct-on-load serving mode's linear: ``W`` is the full
+    reconstructed leaf (spec.shape).  Contracting through the same
+    blocked tree as the streamed impls is what makes load-mode serving
+    bit-identical to streaming-mode serving — the modes differ only in
+    WHERE the block's weight values come from (a resident tensor vs an
+    in-block regeneration), never in how they are summed.
+    """
+    if x.ndim != 1:
+        raise ValueError(
+            f"serve_resident_matvec takes x (d_in,), got {x.shape}"
+        )
+    row_offset, d_in, d_out = _serve_resident_dims(spec, int(group), x)
+    return _serve_contract_resident(spec, W, x, row_offset, d_in, d_out,
+                                    int(bm))
+
+
+def serve_resident_matmul(spec: QSpec, W, X, *, group: int = 0,
+                          bm: int = SERVE_BM):
+    """Y = X @ W_g against a materialized leaf for (B, d_in) batches."""
+    if X.ndim != 2:
+        raise ValueError(
+            f"serve_resident_matmul takes X (B, d_in), got {X.shape}"
+        )
+    row_offset, d_in, d_out = _serve_resident_dims(spec, int(group), X)
+    return _serve_contract_resident(spec, W, X, row_offset, d_in, d_out,
+                                    int(bm))
+
+
+def serve_embed_rows(spec: QSpec, words, step, tokens, *,
+                     qbits: Optional[int] = None):
+    """Streamed embedding-row gather: tokens (...) int -> (..., d_out).
+
+    Row t of a 2-D (vocab, d_model) leaf is the contiguous flat-row
+    run [t*d_model, (t+1)*d_model); the per-edge draw regenerates just
+    those rows — bit-identical to ``jnp.take`` on the materialized
+    table, at O(B·d_model·d) hashes per token batch.  Pure jnp on
+    every impl (a gather has no contraction to fuse into).
+    """
+    groups, d_in, d_out = serve_group_dims(spec)
+    if groups != 1:
+        raise ValueError(
+            f"serve_embed_rows addresses 2-D table leaves; spec shape "
+            f"{spec.shape} has {groups} stacked groups"
+        )
+    p = _serve_operand(spec, words, qbits)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    rows = tokens[..., None] * d_out + jnp.arange(d_out, dtype=jnp.int32)
+    return _serve_edge_weights(spec, p, step, rows, qbits)

@@ -1,0 +1,241 @@
+"""Pallas decode kernels: fused ``y = x @ (Q Bern(f(s)))`` — serving
+without weights.
+
+``qz_reconstruct`` turned the mask lifecycle into in-kernel draws but
+still EMITS the (m,) weight tensor; a serving fleet then holds full
+f32 weights resident per model, which is exactly the memory the
+paper's (seed, z) story promised back.  These kernels go one step
+further: the decode-path contraction consumes the weight values the
+moment they are regenerated, so the only resident zampled state is the
+encoded score broadcast (u8/u16 words, or f32 scores) and the only
+weight values that ever exist live in VMEM for one block.
+
+Per (window, bm) grid block, for the submatrix ``W_g = rows
+[row_offset, row_offset + d_in*d_out)`` of the spec's flat moved row
+space (``group`` selects a stacked layer; 2-D leaves have one group):
+
+ - regenerate the block's Q edges from the counter-hash RNG
+   (``core.qspec.row_indices`` / ``row_values`` — identical streams to
+   every other kernel);
+ - draw the z-window in-block from the encoded score words: f32 scores
+   via ``bernoulli_u32``, quantized words via the widened-threshold
+   integer compare ``(u >> 8) < quant_threshold_u24(q)`` (the PR-5
+   downlink codec contract, ``comm.downlink``) — the decoded f32 score
+   vector never exists anywhere;
+ - scatter the block's ``bm`` weight values into the canonical
+   i-aligned tile: flat row ``r`` maps to cell ``(i - i_lo, o)`` of a
+   (NI, d_out) tile with ``i = (r - row_offset) // d_out``,
+   ``o = (r - row_offset) % d_out``, ``i_lo`` the block's first input
+   row and ``NI = bm // d_out + 2`` static (each cell is one term, so
+   the scatter is exact);
+ - accumulate ``y += x[i_lo : i_lo + NI] @ tile`` into the revisited
+   (d_out,) / (B, d_out) output that stays in VMEM across the grid
+   (zero-initialized at grid step (0, 0)).
+
+Exactness contract: the kernels replay ``kernels.ops``'s CANONICAL
+CONTRACTION TREE (see the serve section comment there) — identical
+tile shapes, operand values, and ascending (window, block) add order
+as the ref/chunked impls — so the result is bit-identical to
+``reconstruct``-then-(canonically tiled)-matmul by construction, up
+to IEEE signed zeros in all-dead tile cells (XLA's own dot reduction
+tree is context-dependent, which is why the tree is pinned explicitly
+rather than inherited from one big ``jnp.dot``).  Verified in
+tests/test_serve.py: exact equality, all three codecs, single and
+batched, interpret-mode Pallas vs both jnp fallbacks.
+
+VMEM note: the scatter one-hots are (bm, NI), (bm, d_out), and
+(NI, d_in) f32 — at bm=256 and LLM vocab widths the (bm, d_out)
+one-hot dominates.  Interpret mode is the validation target here; on
+hardware the out one-hot wants a blocked d_out grid axis (carried in
+ROADMAP with the other TPU items).
+
+Grid: only the windows overlapping the group's row range run —
+``w0 = row_offset // rows_per_window`` is folded into the p-window
+BlockSpec, so a stacked leaf costs one layer's blocks per call, not L.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.hashrng import bernoulli_u32
+from ..core.qspec import QSpec, row_indices, row_values
+from ..core.sampling import mask_u32, quant_threshold_u24
+from .ops import SERVE_BM, serve_block_grid, serve_tile_rows
+from .qz_reconstruct import _onehot
+
+
+def _decode_window_mask(spec: QSpec, step, p_win, w0: int, qbits):
+    """Draw grid window ``w0 + program_id(0)``'s z-bits in-block.
+
+    Same draw as ``qz_reconstruct._window_mask`` but with the window
+    base offset: the decode grid only spans the windows overlapping
+    one group's rows, so the global window id is ``w0 + i``.
+    """
+    i = pl.program_id(0)
+    coords = (w0 + i) * spec.window + jax.lax.iota(jnp.int32, spec.window)
+    u = mask_u32(spec.seed, spec.tensor_id, step, coords)
+    if qbits is None:
+        return bernoulli_u32(u, p_win.astype(jnp.float32))
+    thr = quant_threshold_u24(p_win, qbits)
+    return ((u >> np.uint32(8)) < thr).astype(jnp.float32)
+
+
+def _decode_block(p_ref, step_ref, *, spec: QSpec, bm: int, w0: int,
+                  row_offset: int, d_in: int, d_out: int, qbits):
+    """Shared front half of both decode kernels.
+
+    Regenerates this block's weight values and scatters them into the
+    canonical (NI, d_out) tile.  Returns (tile, oh_x) with ``oh_x``
+    the (NI, d_in) one-hot selecting ``x[i_lo : i_lo + NI]`` (zero
+    rows past d_in), matching ``ops._serve_contract_blocks``'s padded
+    dynamic slice value-for-value.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    lane = jax.lax.iota(jnp.int32, bm)
+    bstart = (w0 + i) * spec.rows_per_window + j * bm
+    rows = bstart + lane
+    sub = d_in * d_out
+    live = (
+        (rows >= row_offset)
+        & (rows < row_offset + sub)
+        & (j * bm + lane < spec.rows_per_window)
+        & (rows < spec.m)
+    )
+    idx = row_indices(spec, rows)  # (bm, d) in-window
+    vals = row_values(spec, rows, dtype=jnp.float32)
+    zwin = _decode_window_mask(spec, step_ref[0], p_ref[...], w0, qbits)
+    zsel = jnp.dot(_onehot(idx, spec.window), zwin,
+                   preferred_element_type=jnp.float32)
+    w_blk = jnp.where(live,
+                      jnp.sum(vals * zsel.reshape(bm, spec.d), axis=-1),
+                      0.0)
+    ni = serve_tile_rows(bm, d_out)
+    i_lo = jnp.clip(bstart - row_offset, 0, sub - 1) // d_out
+    flat = rows - row_offset
+    a_rows = jnp.where(live, flat // d_out - i_lo, ni)
+    o_cols = jnp.where(live, flat % d_out, 0)
+    oh_a = (a_rows[:, None] == jax.lax.iota(jnp.int32, ni)[None, :]
+            ).astype(jnp.float32)  # (bm, ni)
+    oh_o = (o_cols[:, None] == jax.lax.iota(jnp.int32, d_out)[None, :]
+            ).astype(jnp.float32)  # (bm, d_out)
+    tile = jnp.dot(oh_a.T, w_blk[:, None] * oh_o,
+                   preferred_element_type=jnp.float32)  # (ni, d_out)
+    oh_x = ((i_lo + jax.lax.iota(jnp.int32, ni))[:, None]
+            == jax.lax.iota(jnp.int32, d_in)[None, :]
+            ).astype(jnp.float32)  # (ni, d_in)
+    return tile, oh_x
+
+
+def _mv_kernel(p_ref, step_ref, x_ref, y_ref, *, spec: QSpec, bm: int,
+               w0: int, row_offset: int, d_in: int, d_out: int, qbits):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    tile, oh_x = _decode_block(
+        p_ref, step_ref, spec=spec, bm=bm, w0=w0, row_offset=row_offset,
+        d_in=d_in, d_out=d_out, qbits=qbits,
+    )
+    xseg = jnp.dot(oh_x, x_ref[...].astype(jnp.float32),
+                   preferred_element_type=jnp.float32)  # (ni,)
+    y_ref[...] += jnp.dot(xseg, tile,
+                          preferred_element_type=jnp.float32)
+
+
+def _mm_kernel(p_ref, step_ref, x_ref, y_ref, *, spec: QSpec, bm: int,
+               w0: int, row_offset: int, d_in: int, d_out: int, qbits):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    tile, oh_x = _decode_block(
+        p_ref, step_ref, spec=spec, bm=bm, w0=w0, row_offset=row_offset,
+        d_in=d_in, d_out=d_out, qbits=qbits,
+    )
+    xseg = jnp.dot(x_ref[...].astype(jnp.float32), oh_x.T,
+                   preferred_element_type=jnp.float32)  # (B, ni)
+    y_ref[...] += jnp.dot(xseg, tile,
+                          preferred_element_type=jnp.float32)
+
+
+def _check_layout(spec: QSpec, row_offset: int, d_in: int, d_out: int):
+    if spec.shard_count != 1:
+        raise ValueError(
+            "decode kernels address the single-block row layout; "
+            f"spec has shard_count={spec.shard_count}"
+        )
+    if row_offset + d_in * d_out > spec.m:
+        raise ValueError(
+            f"group rows [{row_offset}, {row_offset + d_in * d_out}) "
+            f"exceed spec.m={spec.m}"
+        )
+
+
+def qz_sample_matvec(spec: QSpec, p, step, x, *, row_offset: int = 0,
+                     d_in: int, d_out: int, qbits=None,
+                     bm: int = SERVE_BM, interpret: bool = True):
+    """Fused serve matvec: encoded scores + x (d_in,) -> y (d_out,) f32.
+
+    ``p``: the (n,) score operand — CLIPPED f32 probabilities
+    (``qbits=None``) or the codec's uint words (``qbits=b``).  ``step``
+    is the uint32 draw word pinning the mask draw.  Bit-identical to
+    ``ops.serve_matvec`` on every impl (the canonical tree) for rows
+    [row_offset, row_offset + d_in*d_out).
+    """
+    _check_layout(spec, row_offset, d_in, d_out)
+    w0, nblk, bpw = serve_block_grid(spec, bm, row_offset, d_in * d_out)
+    operand = (p.astype(jnp.float32) if qbits is None
+               else jnp.asarray(p).astype(jnp.uint32))
+    return pl.pallas_call(
+        functools.partial(_mv_kernel, spec=spec, bm=bm, w0=w0,
+                          row_offset=row_offset, d_in=d_in, d_out=d_out,
+                          qbits=qbits),
+        grid=(nblk // bpw, bpw),
+        in_specs=[
+            pl.BlockSpec((spec.window,), lambda i, j: (w0 + i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((d_in,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d_out,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d_out,), jnp.float32),
+        interpret=interpret,
+    )(operand, jnp.asarray(step, jnp.uint32).reshape(1),
+      x.astype(jnp.float32))
+
+
+def qz_sample_matmul(spec: QSpec, p, step, X, *, row_offset: int = 0,
+                     d_in: int, d_out: int, qbits=None,
+                     bm: int = SERVE_BM, interpret: bool = True):
+    """Fused serve matmul: encoded scores + X (B, d_in) -> (B, d_out).
+
+    The batch rides in-block as extra rows of the x-segment selection
+    (the same K-columns-for-free trade as the batched reconstruct
+    kernels); grid, draws, and tile tree are identical to the matvec.
+    """
+    _check_layout(spec, row_offset, d_in, d_out)
+    w0, nblk, bpw = serve_block_grid(spec, bm, row_offset, d_in * d_out)
+    B = X.shape[0]
+    operand = (p.astype(jnp.float32) if qbits is None
+               else jnp.asarray(p).astype(jnp.uint32))
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, spec=spec, bm=bm, w0=w0,
+                          row_offset=row_offset, d_in=d_in, d_out=d_out,
+                          qbits=qbits),
+        grid=(nblk // bpw, bpw),
+        in_specs=[
+            pl.BlockSpec((spec.window,), lambda i, j: (w0 + i,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((B, d_in), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, d_out), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d_out), jnp.float32),
+        interpret=interpret,
+    )(operand, jnp.asarray(step, jnp.uint32).reshape(1),
+      X.astype(jnp.float32))

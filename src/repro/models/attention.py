@@ -60,12 +60,16 @@ def init_attn_params(key, d_model: int, dims: AttnDims, dtype,
     return p
 
 
-def _qkv(params, x, dims: AttnDims, positions):
-    B, S, _ = x.shape
+def finish_qkv(params, q, k, v, dims: AttnDims, positions):
+    """Bias / head-reshape / qk-norm / rope tail of the QKV projection.
+
+    Takes the three raw (B, S, K) projections; split out so the
+    serving engine (serve.decode) can run the projections through
+    streamed linears and still share this exact head plumbing with the
+    dense path.
+    """
+    B, S = q.shape[:2]
     h, kv, hd = dims.n_heads, dims.n_kv, dims.head_dim
-    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
-    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
-    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
     if dims.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     q = q.reshape(B, S, h, hd)
@@ -78,6 +82,13 @@ def _qkv(params, x, dims: AttnDims, positions):
         q = rope(q, positions, dims.rope_theta)
         k = rope(k, positions, dims.rope_theta)
     return q, k, v
+
+
+def _qkv(params, x, dims: AttnDims, positions):
+    q = jnp.einsum("bsd,dk->bsk", x, params["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, params["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, params["wv"])
+    return finish_qkv(params, q, k, v, dims, positions)
 
 
 def _sdpa(q, k, v, mask, n_rep: int):
@@ -145,13 +156,17 @@ def init_cache(batch: int, seq_len: int, dims: AttnDims, dtype) -> KVCache:
     )
 
 
-def decode_self_attention(params, x, cache: KVCache, dims: AttnDims):
-    """One-token decode: x (B, 1, d). Ring-buffer write under SWA."""
-    B = x.shape[0]
+def decode_attend(q, k, v, cache: KVCache, dims: AttnDims):
+    """Post-QKV single-token attention: cache write + masked SDPA.
+
+    q/k/v (B, 1, heads, hd) already rope'd.  Returns (out (B, 1, H·hd)
+    pre-``wo``, new KVCache) — split from ``decode_self_attention`` so
+    the serving engine can stream the projections and share this exact
+    cache/mask/softmax plumbing.
+    """
+    B = q.shape[0]
     C = cache.k.shape[1]
     pos = cache.pos  # absolute position of the new token
-    positions = jnp.broadcast_to(pos[None, None], (B, 1))
-    q, k, v = _qkv(params, x, dims, positions)
     slot = pos % C if dims.window is not None else jnp.minimum(pos, C - 1)
     # one-hot write (not dynamic_update_slice): elementwise over the
     # cache, so GSPMD keeps a seq-sharded cache local instead of
@@ -172,10 +187,17 @@ def decode_self_attention(params, x, cache: KVCache, dims: AttnDims):
     mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
     mask = jnp.broadcast_to(mask[None, None, None, :], (B, 1, 1, C))
     out = _sdpa(q, new_k, new_v, mask, dims.n_heads // dims.n_kv)
-    y = jnp.einsum(
-        "bqk,kd->bqd", out.reshape(B, 1, -1), params["wo"].reshape(-1, x.shape[-1])
-    )
-    return y, KVCache(new_k, new_v, pos + 1)
+    return out.reshape(B, 1, -1), KVCache(new_k, new_v, pos + 1)
+
+
+def decode_self_attention(params, x, cache: KVCache, dims: AttnDims):
+    """One-token decode: x (B, 1, d). Ring-buffer write under SWA."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(cache.pos[None, None], (B, 1))
+    q, k, v = _qkv(params, x, dims, positions)
+    out, new_cache = decode_attend(q, k, v, cache, dims)
+    y = jnp.einsum("bqk,kd->bqd", out, params["wo"].reshape(-1, x.shape[-1]))
+    return y, new_cache
 
 
 def cross_attention(params, x, enc_k, enc_v, dims: AttnDims,

@@ -1,3 +1,27 @@
-from .decode import generate, serve_from_compressed
+from .decode import (
+    ServeEngine,
+    build_serve_engine,
+    generate,
+    make_generator,
+    serve_from_compressed,
+    serve_generate,
+)
+from .delta import (
+    ServeDelta,
+    apply_delta,
+    apply_word_delta,
+    delta_report,
+    lanes_delta,
+    make_delta,
+    word_delta,
+)
+from .state import ServeState, make_serve_state, reconstruct_resident
 
-__all__ = ["generate", "serve_from_compressed"]
+__all__ = [
+    "ServeEngine", "ServeState", "ServeDelta",
+    "build_serve_engine", "make_generator", "generate",
+    "serve_generate", "serve_from_compressed",
+    "make_serve_state", "reconstruct_resident",
+    "make_delta", "apply_delta", "delta_report",
+    "word_delta", "apply_word_delta", "lanes_delta",
+]

@@ -1,22 +1,106 @@
-"""Serving: batched autoregressive generation over the decode_step path.
+"""Serving: scan-driven generation, with a Zampling-native engine.
 
-At production scale the decode_step is pjit-lowered per the dry-run;
-this module drives it for the runnable examples/tests (CPU scale).
-``serve_from_compressed`` is the Zampling-native deployment: the node
-stores only (seed, z) — m/32 bits of model state — and reconstructs
-weights on load (or per-step under the 'streaming' memory trade
-analyzed in EXPERIMENTS.md §Perf).
+Two ways to serve a zampled model:
+
+ - ``mode="load"`` — reconstruct every zampled leaf once at startup
+   (``serve.state.reconstruct_resident``) and decode against the
+   materialized f32 tensors.  Fast steps, but the node holds 32 bits
+   per weight again — the memory the (seed, z) story promised back.
+ - ``mode="streaming"`` — the node's only zampled state is the encoded
+   score broadcast (``ServeState``); every decode-step linear calls
+   ``kernels.ops.serve_matmul`` / ``serve_embed_rows``, which
+   regenerate Q edges and draw mask bits inside the contraction.  No
+   weight tensor ever exists (jaxpr-asserted in tests/test_serve.py);
+   resident zampled bytes drop from 32m to the wire size of the codec
+   words (n·codec.bits bits).
+
+The two modes are BIT-IDENTICAL: both run the same engine code
+(layers unrolled in Python — a lax.scan over layers lets XLA fuse the
+norm reductions differently and breaks bitwise equality) and both
+contract every zampled linear through the canonical blocked tree
+(``kernels/ops.py`` serve section); they differ only in where each
+block's weight values come from.  That makes streaming-vs-load a pure
+memory/latency trade with zero output risk, and makes a delta
+hot-swap (``serve.delta.apply_delta``) equivalent to restarting the
+server on the new round's broadcast.
+
+Generation is a jitted ``lax.scan`` pair — a cache-building prefill
+scan over the prompt (the decoder's ``model.prefill`` is logits-only
+and returns no cache, so scanning ``decode_step`` IS the cache-honest
+prefill at serving time) and a greedy/temperature generation scan —
+so serving benches measure decode, not Python-loop dispatch.  Engine
+arrays travel as jit ARGUMENTS (never closure constants): swapping in
+a delta-patched ``ServeState`` reuses the compiled step.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..core.zampling import ZamplingSpecs, weights_from_masks
-from ..models.model import Model
+from ..kernels import ops
+from ..models import attention as attn
+from ..models.attention import KVCache
+from ..models.common import rms_norm
+from ..models.model import Model, _attn_dims
+from .state import ServeState, reconstruct_resident
+
+
+def make_generator(step_fn, max_new_tokens: int, temperature: float = 0.0):
+    """Jit-once generation driver over ``step_fn(arrays, cache, tok)``.
+
+    Returns ``run(arrays, cache, prompt, key) -> (new_tokens (B, N),
+    cache)``: a prefill scan feeding the prompt token-by-token through
+    the step (building the KV cache), then a generation scan sampling
+    ``max_new_tokens`` greedily (``temperature == 0``) or from the
+    tempered logits with ``fold_in(key, i)`` per position.  Reuse the
+    returned callable across calls — each ``make_generator`` call
+    traces fresh.
+    """
+
+    def select(logits, key, i):
+        if temperature > 0.0:
+            sub = jax.random.fold_in(key, i)
+            return jax.random.categorical(
+                sub, logits.astype(jnp.float32) / temperature
+            ).astype(jnp.int32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    @jax.jit
+    def run(arrays, cache, prompt, key):
+        def prefill_body(c, t):
+            logits, c = step_fn(arrays, c, t[:, None])
+            return c, logits[:, -1]
+
+        cache, last = jax.lax.scan(prefill_body, cache,
+                                   jnp.swapaxes(prompt, 0, 1))
+        first = select(last[-1], key, 0)
+
+        def gen_body(carry, i):
+            c, prev = carry
+            logits, c = step_fn(arrays, c, prev[:, None])
+            nxt = select(logits[:, -1], key, i)
+            return (c, nxt), nxt
+
+        if max_new_tokens > 1:
+            (cache, _), rest = jax.lax.scan(
+                gen_body, (cache, first),
+                jnp.arange(1, max_new_tokens, dtype=jnp.int32))
+            toks = jnp.concatenate([first[None], rest], axis=0)
+        else:
+            toks = first[None]
+        return jnp.swapaxes(toks, 0, 1), cache
+
+    return run
+
+
+def _check_key(temperature: float, key):
+    if temperature > 0.0 and key is None:
+        raise ValueError("temperature sampling needs a PRNG key")
+    return key if key is not None else jax.random.PRNGKey(0)
 
 
 def generate(
@@ -34,29 +118,169 @@ def generate(
     seq_len = seq_len or (Sp + max_new_tokens)
     cache = model.init_cache(params, B, seq_len)
 
-    @jax.jit
-    def step(cache, tok):
-        return model.decode_step(params, cache, {"tokens": tok})
+    def step_fn(arrays, c, tok):
+        return model.decode_step(arrays, c, {"tokens": tok})
 
-    # feed the prompt token-by-token (CPU-scale prefill)
-    logits = None
-    for t in range(Sp):
-        logits, cache = step(cache, prompt[:, t : t + 1])
+    run = make_generator(step_fn, max_new_tokens, temperature)
+    new, _ = run(params, cache, prompt, _check_key(temperature, key))
+    return jnp.concatenate([prompt, new.astype(prompt.dtype)], axis=1)
 
-    toks = [prompt]
-    cur = None
-    for i in range(max_new_tokens):
-        if temperature > 0.0:
-            key, sub = jax.random.split(key)
-            cur = jax.random.categorical(
-                sub, logits[:, -1].astype(jnp.float32) / temperature
-            )[:, None]
-        else:
-            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        toks.append(cur)
-        if i + 1 < max_new_tokens:
-            logits, cache = step(cache, cur)
-    return jnp.concatenate(toks, axis=1)
+
+# ---------------------------------------------------------------------------
+# the Zampling-native serving engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine(NamedTuple):
+    """A compiled-shape serving plan for one (model, ServeState) pair.
+
+    ``step(arrays, cache, tok (B, 1)) -> (logits (B, 1, V), cache)``;
+    ``arrays_of(sstate)`` builds the jit-visible arrays for any state
+    sharing this engine's zspecs/codec (THE hot-swap path: feed a
+    delta-patched state's arrays to the same compiled step);
+    ``init_cache(B, seq_len)`` the matching KV cache.
+    """
+
+    step: Callable[..., Any]
+    arrays_of: Callable[[ServeState], Dict[str, Any]]
+    init_cache: Callable[[int, int], Any]
+    mode: str
+
+
+def build_serve_engine(model: Model, sstate: ServeState, *,
+                       mode: str = "streaming",
+                       impl: Optional[str] = None) -> ServeEngine:
+    """Build the serving decode step for a dense-family decoder.
+
+    Layers are unrolled in Python and every zampled linear goes
+    through the canonical serve contraction, so ``mode="load"`` and
+    ``mode="streaming"`` produce bit-identical logits (the load/
+    streaming trade is memory-only).  ``impl`` picks the streaming
+    kernel impl (ref/chunked/pallas; default ``REPRO_SERVE_IMPL`` or
+    'chunked').
+    """
+    if mode not in ("load", "streaming"):
+        raise ValueError(f"unknown serve mode {mode!r}")
+    cfg = model.cfg
+    if cfg.family not in ("dense", "vlm") or cfg.moe is not None:
+        raise NotImplementedError(
+            "the serving engine covers the dense decoder family; got "
+            f"family={cfg.family!r}"
+        )
+    dims = _attn_dims(cfg)
+    L = cfg.n_layers
+    specs = sstate.zspecs.specs
+    qbits = sstate.qbits
+
+    for path in specs:
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf in ("ln1", "ln2", "bq", "bk", "bv", "q_norm", "k_norm",
+                    "final_norm"):
+            raise NotImplementedError(
+                f"engine expects bias/norm leaves dense, got zampled "
+                f"{path!r}"
+            )
+
+    def arrays_of(s: ServeState) -> Dict[str, Any]:
+        if mode == "load":
+            return {"weights": reconstruct_resident(s),
+                    "dense": dict(s.dense)}
+        return s.arrays()
+
+    def linear(arrays, path, layer, x2d):
+        """x2d (B, d_in) @ leaf[layer] -> (B, d_out)."""
+        spec = specs.get(path)
+        if spec is None:
+            w = arrays["dense"][path]
+            if w.ndim == 3:
+                w = w[layer]
+            return jnp.dot(x2d, w)
+        if mode == "load":
+            return ops.serve_resident_matmul(spec, arrays["weights"][path],
+                                             x2d, group=layer)
+        return ops.serve_matmul(spec, arrays["words"][path],
+                                arrays["step"], x2d, group=layer,
+                                qbits=qbits, impl=impl)
+
+    def embed_rows(arrays, tokens):
+        spec = specs.get("embed")
+        if spec is None:
+            return jnp.take(arrays["dense"]["embed"], tokens, axis=0)
+        if mode == "load":
+            return jnp.take(arrays["weights"]["embed"], tokens, axis=0)
+        return ops.serve_embed_rows(spec, arrays["words"]["embed"],
+                                    arrays["step"], tokens, qbits=qbits)
+
+    def dlayer(arrays, path, layer):
+        return arrays["dense"][path][layer]
+
+    attn_extras = []
+    if dims.qkv_bias:
+        attn_extras += ["bq", "bk", "bv"]
+    if dims.qk_norm:
+        attn_extras += ["q_norm", "k_norm"]
+
+    def step(arrays, cache, tokens):
+        x = embed_rows(arrays, tokens)  # (B, 1, D)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(cache.pos[None, None], (B, 1))
+        nk, nv = [], []
+        for l in range(L):
+            h = rms_norm(x, dlayer(arrays, "blocks/ln1", l)).reshape(B, -1)
+            q = linear(arrays, "blocks/attn/wq", l, h)[:, None, :]
+            k = linear(arrays, "blocks/attn/wk", l, h)[:, None, :]
+            v = linear(arrays, "blocks/attn/wv", l, h)[:, None, :]
+            ap = {e: dlayer(arrays, f"blocks/attn/{e}", l)
+                  for e in attn_extras}
+            q, k, v = attn.finish_qkv(ap, q, k, v, dims, positions)
+            lc = KVCache(k=cache.k[l], v=cache.v[l], pos=cache.pos)
+            out, nc = attn.decode_attend(q, k, v, lc, dims)
+            x = x + linear(arrays, "blocks/attn/wo", l,
+                           out.reshape(B, -1))[:, None, :]
+            hm = rms_norm(x, dlayer(arrays, "blocks/ln2", l)).reshape(B, -1)
+            g = linear(arrays, "blocks/mlp/gate", l, hm)
+            u = linear(arrays, "blocks/mlp/up", l, hm)
+            hsw = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+            x = x + linear(arrays, "blocks/mlp/down", l, hsw)[:, None, :]
+            nk.append(nc.k)
+            nv.append(nc.v)
+        x = rms_norm(x, arrays["dense"]["final_norm"])
+        logits = linear(arrays, "lm_head", 0, x.reshape(B, -1))[:, None, :]
+        return logits, KVCache(k=jnp.stack(nk), v=jnp.stack(nv),
+                               pos=cache.pos + 1)
+
+    def init_cache(batch_size: int, seq_len: int):
+        return model.init_cache(None, batch_size, seq_len)
+
+    return ServeEngine(step=step, arrays_of=arrays_of,
+                       init_cache=init_cache, mode=mode)
+
+
+def serve_generate(
+    model: Model,
+    sstate: ServeState,
+    prompt,
+    max_new_tokens: int,
+    *,
+    mode: str = "streaming",
+    impl: Optional[str] = None,
+    seq_len: Optional[int] = None,
+    temperature: float = 0.0,
+    key=None,
+):
+    """Generate from a ServeState. Returns (B, Sp+new) tokens.
+
+    ``mode="streaming"`` never materializes a weight tensor;
+    ``mode="load"`` reconstructs once and serves resident.  Outputs
+    are bit-identical across modes.
+    """
+    engine = build_serve_engine(model, sstate, mode=mode, impl=impl)
+    B, Sp = prompt.shape
+    seq_len = seq_len or (Sp + max_new_tokens)
+    cache = engine.init_cache(B, seq_len)
+    run = make_generator(engine.step, max_new_tokens, temperature)
+    new, _ = run(engine.arrays_of(sstate), cache, prompt,
+                 _check_key(temperature, key))
+    return jnp.concatenate([prompt, new.astype(prompt.dtype)], axis=1)
 
 
 def serve_from_compressed(

@@ -1,0 +1,158 @@
+"""Round-to-round serving updates as XOR deltas of the score broadcast.
+
+Between federated rounds t and t+1 most encoded score words do not
+change — late in training the server's score vector moves slowly, and
+the quantized codecs (u8/u16) snap small moves to the SAME wire word
+(provided the server reuses one dither word across rounds: the dither
+stream is a pure function of (tensor_id, dither word, coordinate), so
+an unchanged quantized probability re-encodes to an unchanged word —
+see ``comm/downlink.py``).  Broadcasting the full word vector every
+round then pays for information the serving fleet already has.
+
+The delta wire is the XOR of the two rounds' word BIT PATTERNS (f32
+scores are bitcast to uint32 first): zero where unchanged, and
+trivially invertible — ``apply_delta`` XORs the patch back into a live
+server's words, which is bit-identical to a fresh load of round t+1
+(pinned in tests/test_serve.py), because the serving engine's output
+is a pure function of (words, step) and the patched words ARE round
+t+1's words.  No re-encode, no drift, no restart.
+
+Byte accounting is exact (``comm.metering.delta_wire_bytes``): the
+broadcaster ships the cheaper of a presence bitmap or a coordinate
+list, plus the 4-byte draw word.  The same XOR trick meters packed
+mask-lane updates (``lanes_delta``) for deployments that ship drawn
+masks rather than scores.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..comm.downlink import get_codec
+from ..comm.metering import delta_wire_bytes, score_downlink_bytes
+from .state import ServeState
+
+
+def _bits(a):
+    """Bit pattern of a word array as a same-width unsigned int."""
+    a = jnp.asarray(a)
+    if jnp.issubdtype(a.dtype, jnp.floating):
+        return jax.lax.bitcast_convert_type(a, jnp.uint32)
+    return a
+
+
+def _unbits(u, dtype):
+    """Inverse of ``_bits``: reinterpret back to the word dtype."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jax.lax.bitcast_convert_type(u.astype(jnp.uint32), dtype)
+    return u.astype(dtype)
+
+
+def word_delta(old, new):
+    """XOR patch old -> new of one word array (uint, zero = unchanged)."""
+    o, n = _bits(old), _bits(new)
+    if o.shape != n.shape:
+        raise ValueError(f"word shapes differ: {o.shape} vs {n.shape}")
+    return o ^ n
+
+
+def apply_word_delta(base, patch):
+    """XOR a patch into a word array, preserving the word dtype."""
+    return _unbits(_bits(base) ^ jnp.asarray(patch), jnp.asarray(base).dtype)
+
+
+class ServeDelta(NamedTuple):
+    """One round's serving update: per-path XOR word patches + the new
+    draw word.  ``codec`` guards against cross-codec application."""
+
+    codec: str
+    words: Dict[str, Any]  # path -> XOR patch (unsigned, zero=same)
+    step: Any  # () uint32 — round t+1's draw word
+
+
+def make_delta(old: ServeState, new: ServeState) -> ServeDelta:
+    """The broadcastable update taking a round-t server to round t+1."""
+    if old.codec != new.codec:
+        raise ValueError(
+            f"delta across codecs ({old.codec!r} -> {new.codec!r}); "
+            "re-broadcast in full instead"
+        )
+    if set(old.words) != set(new.words):
+        raise ValueError("delta requires identical zampled leaf sets")
+    return ServeDelta(
+        codec=new.codec,
+        words={p: word_delta(old.words[p], new.words[p])
+               for p in old.words},
+        step=jnp.asarray(new.step, jnp.uint32),
+    )
+
+
+def apply_delta(sstate: ServeState, delta: ServeDelta) -> ServeState:
+    """Hot-swap: patch a live server's words to the next round.
+
+    Returns a ServeState bit-identical to ``make_serve_state`` on round
+    t+1's broadcast; feed ``engine.arrays_of`` on the result to the
+    already-compiled decode step (arrays are jit arguments, so no
+    recompile).
+    """
+    if delta.codec != sstate.codec:
+        raise ValueError(
+            f"delta is for codec {delta.codec!r}, state carries "
+            f"{sstate.codec!r}"
+        )
+    words = {p: apply_word_delta(sstate.words[p], delta.words[p])
+             for p in sstate.words}
+    return sstate.replace_arrays(
+        {"words": words, "dense": dict(sstate.dense), "step": delta.step}
+    )
+
+
+def lanes_delta(old_lanes: Dict[str, Any], new_lanes: Dict[str, Any]):
+    """XOR patches for packed uint32 mask lanes (the drawn-mask wire of
+    ``comm.protocol``'s packed transports): {path: patch}."""
+    if set(old_lanes) != set(new_lanes):
+        raise ValueError("lane delta requires identical leaf sets")
+    return {p: word_delta(old_lanes[p], new_lanes[p]) for p in old_lanes}
+
+
+def delta_report(old: ServeState, new: ServeState) -> Dict[str, Any]:
+    """Exact byte accounting of delta-vs-full for one round step.
+
+    ``delta_bytes`` is what ``make_delta`` costs on the wire (cheaper
+    of bitmap / coordinate-list per leaf, + 4 bytes draw word);
+    ``full_bytes`` is the codec's full score broadcast for the same
+    leaf set.  Word-change counts are computed host-side, so call this
+    outside jit.
+    """
+    delta = make_delta(old, new)
+    codec = get_codec(new.codec)
+    wb = codec.bits // 8
+    per_path = {}
+    delta_bytes = 4  # the draw word rides along
+    full_bytes = 0
+    changed_total = 0
+    total = 0
+    for path, patch in delta.words.items():
+        n = int(patch.size)
+        changed = int(jnp.count_nonzero(patch))
+        d = delta_wire_bytes(n, changed, wb)
+        f = score_downlink_bytes(codec, n)
+        per_path[path] = {"words": n, "changed": changed,
+                          "delta_bytes": d, "full_bytes": f}
+        delta_bytes += d
+        full_bytes += f
+        changed_total += changed
+        total += n
+    return {
+        "codec": new.codec,
+        "words_total": total,
+        "words_changed": changed_total,
+        "delta_bytes": delta_bytes,
+        "full_bytes": full_bytes,
+        "delta_vs_full": delta_bytes / full_bytes if full_bytes else 0.0,
+        "per_path": per_path,
+    }

@@ -1,0 +1,133 @@
+"""Serving state: the encoded score broadcast as the ONLY zampled state.
+
+A Zampling serving node does not hold weights.  Its entire zampled
+model state is the downlink codec's encoded score words — u8/u16 wire
+words (or raw f32 scores under the ``f32`` oracle codec) per zampled
+leaf — plus the uint32 draw word that pins the mask draw and the small
+dense leaves (norm scales, biases).  Weights exist only transiently:
+
+ - ``mode="streaming"`` (serve.decode) contracts activations against
+   the encoded words directly via ``kernels.ops.serve_matmul`` /
+   ``serve_embed_rows`` — weight values live for one (window, bm)
+   block and are consumed in place;
+ - ``mode="load"`` calls ``reconstruct_resident`` once and serves from
+   the materialized f32 tensors — the PR-5-era trade this subsystem
+   exists to beat on resident bytes.
+
+Round-to-round updates arrive as XOR deltas of the words
+(serve.delta); ``ServeState.replace_arrays`` swaps the new words into
+a live server without touching the compiled engine (the arrays are
+jit arguments, not closure constants).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Mapping, Optional
+
+import jax.numpy as jnp
+
+from ..comm.downlink import get_codec
+from ..core.sampling import as_word, clip_probs
+from ..core.zampling import ZamplingSpecs, infer_downlink
+
+
+@dataclass(frozen=True)
+class ServeState:
+    """One serving node's model state.
+
+    NOT a jax pytree: the static half (``zspecs``, ``codec``) stays in
+    engine closures; the array half travels through jitted functions
+    via ``arrays()`` / ``replace_arrays`` so a delta hot-swap never
+    recompiles.
+    """
+
+    zspecs: ZamplingSpecs
+    codec: str  # downlink codec name ('f32' | 'u16' | 'u8')
+    words: Mapping[str, Any]  # path -> (n,) encoded score words
+    dense: Mapping[str, Any]  # path -> dense leaf
+    step: Any  # () uint32 mask draw word
+
+    @property
+    def qbits(self) -> Optional[int]:
+        codec = get_codec(self.codec)
+        return codec.bits if codec.quantized else None
+
+    def arrays(self) -> Dict[str, Any]:
+        """The jit-visible half, as a plain dict pytree."""
+        return {"words": dict(self.words), "dense": dict(self.dense),
+                "step": self.step}
+
+    def replace_arrays(self, arrays: Dict[str, Any]) -> "ServeState":
+        """New state with swapped arrays (hot-swap entry point)."""
+        return replace(self, words=dict(arrays["words"]),
+                       dense=dict(arrays["dense"]), step=arrays["step"])
+
+    def resident_zampled_bytes(self) -> int:
+        """Bytes of resident zampled state in streaming mode: the
+        encoded words alone (+4 for the draw word)."""
+        return sum(int(jnp.asarray(w).nbytes) for w in self.words.values()) + 4
+
+    def loaded_zampled_bytes(self) -> int:
+        """Bytes of resident zampled state in reconstruct-on-load mode:
+        the materialized f32 tensors."""
+        return sum(4 * s.m for s in self.zspecs.specs.values())
+
+    def dense_bytes(self) -> int:
+        return sum(int(jnp.asarray(v).nbytes) for v in self.dense.values())
+
+
+def make_serve_state(zspecs: ZamplingSpecs, state, key, *,
+                     downlink: Optional[str] = None,
+                     dither_word=0) -> ServeState:
+    """Build a ServeState from a training-side ``state`` dict.
+
+    ``state``: {"scores": {path: scores-or-wire-words}, "dense": ...}.
+    ``key``: PRNG key or uint32 word pinning the serving mask draw
+    (``core.sampling.as_word`` — same derivation as ``sample_weights``).
+    ``downlink``: target codec; default keeps the state's own
+    representation.  An f32 state is encoded here with ``dither_word``
+    keying the dither stream — servers that broadcast deltas MUST
+    reuse one dither word across rounds (see serve.delta) so unchanged
+    scores keep unchanged words.
+    """
+    carried = infer_downlink(state["scores"])
+    target = downlink or carried
+    if carried == target:
+        words = dict(state["scores"])
+    elif carried != "f32":
+        raise ValueError(
+            f"state already carries codec {carried!r}; decode before "
+            f"re-encoding as {target!r}"
+        )
+    else:
+        codec = get_codec(target)
+        w = as_word(dither_word)
+        words = {path: codec.encode(spec, state["scores"][path], w)
+                 for path, spec in zspecs.specs.items()}
+    return ServeState(zspecs=zspecs, codec=target, words=words,
+                      dense=dict(state["dense"]),
+                      step=jnp.asarray(as_word(key), jnp.uint32))
+
+
+def reconstruct_resident(sstate: ServeState,
+                         impl: Optional[str] = None) -> Dict[str, Any]:
+    """Reconstruct-on-load: materialize every zampled leaf once.
+
+    Returns {path: W (spec.shape) f32} — the resident state of
+    ``mode="load"``.  Values are bit-identical to the weights the
+    streaming path regenerates per block (same draw word, same edge
+    streams), which is what makes the two modes comparable
+    bit-for-bit.
+    """
+    from ..kernels import ops  # kernels sit above comm/core
+
+    qbits = sstate.qbits
+    out = {}
+    for path, spec in sstate.zspecs.specs.items():
+        w = sstate.words[path]
+        operand = w if qbits is not None else clip_probs(
+            jnp.asarray(w).astype(jnp.float32))
+        out[path] = ops.sample_reconstruct(spec, operand, sstate.step,
+                                           qbits=qbits, impl=impl)
+    return out

@@ -1,0 +1,379 @@
+"""Zampling-native serving: fused decode kernels, the two-mode engine,
+and the XOR delta hot-swap.
+
+The load-bearing claims, each pinned bitwise (no tolerances):
+
+ - every serve impl (ref = reconstruct-then-matmul oracle, chunked,
+   interpret-mode Pallas) and the resident (load-mode) contraction
+   produce IDENTICAL bits for all three downlink codecs — the
+   canonical contraction tree contract of kernels/ops.py;
+ - the streaming engine's decode jaxpr contains no f32 value the size
+   of a weight tensor — serving really does run without weights;
+ - applying a round's XOR delta to a live server is indistinguishable,
+   bit for bit, from freshly loading the next round's broadcast —
+   including mid-generation, against a KV cache built under the old
+   round.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.downlink import get_codec
+from repro.comm.metering import delta_wire_bytes, score_downlink_bytes
+from repro.core import ZamplingConfig, build_specs, init_state
+from repro.core.qspec import make_qspec
+from repro.core.sampling import as_word, clip_probs
+from repro.kernels import ops
+from repro.serve import (
+    apply_delta,
+    apply_word_delta,
+    build_serve_engine,
+    delta_report,
+    generate,
+    make_delta,
+    make_generator,
+    make_serve_state,
+    serve_generate,
+    word_delta,
+)
+
+CODECS = ("f32", "u16", "u8")
+
+
+def _scores(n, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32))
+
+
+def _words(codec_name, spec, scores):
+    """(operand, qbits) the serve ops take for this codec."""
+    c = get_codec(codec_name)
+    if c.quantized:
+        return c.encode(spec, scores, as_word(3)), c.bits
+    return scores, None
+
+
+def _reconstruct(spec, codec_name, scores, step):
+    words, qbits = _words(codec_name, spec, scores)
+    operand = words if qbits is not None else clip_probs(scores)
+    return ops.sample_reconstruct(spec, operand, step, qbits=qbits)
+
+
+class TestFusedServeKernels:
+    """serve_matvec/matmul: ref == chunked == pallas(interpret) ==
+    resident, bit for bit, every codec."""
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_matvec_exact_across_impls(self, codec):
+        spec = make_qspec(11, (24, 40), 24, compression=4.0, d=4, window=64)
+        scores = _scores(spec.n)
+        words, qbits = _words(codec, spec, scores)
+        step = as_word(5)
+        x = jnp.asarray(np.random.RandomState(1).randn(24).astype(np.float32))
+        ref = ops.serve_matvec(spec, words, step, x, qbits=qbits,
+                               impl="ref")
+        for impl in ("chunked", "pallas"):
+            out = ops.serve_matvec(spec, words, step, x, qbits=qbits,
+                                   impl=impl)
+            assert (np.asarray(out) == np.asarray(ref)).all(), impl
+        W = _reconstruct(spec, codec, scores, step)
+        res = ops.serve_resident_matvec(spec, W, x)
+        assert (np.asarray(res) == np.asarray(ref)).all()
+        # the oracle really is x @ W (same values, retiled summation)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(x @ W),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_matmul_batched_exact_across_impls(self, codec):
+        spec = make_qspec(12, (24, 40), 24, compression=4.0, d=4, window=64)
+        scores = _scores(spec.n, seed=2)
+        words, qbits = _words(codec, spec, scores)
+        step = as_word(9)
+        X = jnp.asarray(
+            np.random.RandomState(3).randn(3, 24).astype(np.float32))
+        ref = ops.serve_matmul(spec, words, step, X, qbits=qbits,
+                               impl="ref")
+        for impl in ("chunked", "pallas"):
+            out = ops.serve_matmul(spec, words, step, X, qbits=qbits,
+                                   impl=impl)
+            assert (np.asarray(out) == np.asarray(ref)).all(), impl
+        W = _reconstruct(spec, codec, scores, step)
+        res = ops.serve_resident_matmul(spec, W, X)
+        assert (np.asarray(res) == np.asarray(ref)).all()
+
+    def test_stacked_groups_exact(self):
+        spec = make_qspec(13, (2, 16, 24), 16, compression=4.0, d=4,
+                          window=64)
+        scores = _scores(spec.n, seed=4)
+        step = as_word(1)
+        X = jnp.asarray(
+            np.random.RandomState(5).randn(2, 16).astype(np.float32))
+        W = _reconstruct(spec, "u8", scores, step)
+        words, qbits = _words("u8", spec, scores)
+        for g in (0, 1):
+            ref = ops.serve_matmul(spec, words, step, X, group=g,
+                                   qbits=qbits, impl="ref")
+            for impl in ("chunked", "pallas"):
+                out = ops.serve_matmul(spec, words, step, X, group=g,
+                                       qbits=qbits, impl=impl)
+                assert (np.asarray(out) == np.asarray(ref)).all(), (g, impl)
+            res = ops.serve_resident_matmul(spec, W, X, group=g)
+            assert (np.asarray(res) == np.asarray(ref)).all(), g
+
+    def test_embed_rows_match_take(self):
+        spec = make_qspec(14, (40, 24), 40, compression=4.0, d=4, window=64)
+        scores = _scores(spec.n, seed=6)
+        step = as_word(2)
+        tokens = jnp.asarray([[3, 0], [39, 7]], jnp.int32)
+        for codec in CODECS:
+            words, qbits = _words(codec, spec, scores)
+            rows = ops.serve_embed_rows(spec, words, step, tokens,
+                                        qbits=qbits)
+            W = _reconstruct(spec, codec, scores, step)
+            ref = jnp.take(W, tokens, axis=0)
+            assert (np.asarray(rows) == np.asarray(ref)).all(), codec
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs.registry import get_arch
+    from repro.models import build_model
+
+    cfg = get_arch("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    zspecs = build_specs(params, ZamplingConfig(compression=4, d=4))
+    state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=params)
+    return model, zspecs, state
+
+
+def _perturbed(state, frac=0.01, amp=0.05, seed=7):
+    """Round t+1: a converged-round score update touching ``frac``."""
+    key = jax.random.PRNGKey(seed)
+    scores2 = {}
+    for p, s in state["scores"].items():
+        k1, k2, key = jax.random.split(key, 3)
+        touch = jax.random.bernoulli(k1, frac, s.shape)
+        scores2[p] = jnp.where(touch,
+                               s + amp * jax.random.normal(k2, s.shape), s)
+    return {"scores": scores2, "dense": state["dense"]}
+
+
+class TestServeEngine:
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_modes_bit_identical(self, served, codec):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink=codec)
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        o_s = serve_generate(model, ss, prompt, 3, mode="streaming",
+                             seq_len=16)
+        o_l = serve_generate(model, ss, prompt, 3, mode="load", seq_len=16)
+        assert o_s.shape == (1, 7)
+        assert (o_s[:, :4] == prompt).all()
+        assert (np.asarray(o_s) == np.asarray(o_l)).all()
+
+    def test_streaming_jaxpr_materializes_no_weight(self, served):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        engine = build_serve_engine(model, ss, mode="streaming")
+        arrays = engine.arrays_of(ss)
+        cache = engine.init_cache(1, 8)
+        tok = jnp.zeros((1, 1), jnp.int32)
+        jaxpr = jax.make_jaxpr(engine.step)(arrays, cache, tok)
+        thresh = min(s.m for s in zspecs.specs.values())
+
+        def subjaxprs(eqn):
+            for v in eqn.params.values():
+                for item in (v if isinstance(v, (tuple, list)) else (v,)):
+                    inner = getattr(item, "jaxpr", item)
+                    if hasattr(inner, "eqns"):
+                        yield inner
+
+        def walk(jx):
+            for eqn in jx.eqns:
+                for var in eqn.outvars:
+                    av = var.aval
+                    if (getattr(av, "dtype", None) == jnp.float32
+                            and av.size >= thresh):
+                        raise AssertionError(
+                            f"weight-sized f32 {av.shape} materialized by "
+                            f"{eqn.primitive} in the streaming decode jaxpr"
+                        )
+                for sub in subjaxprs(eqn):
+                    walk(sub)
+
+        walk(jaxpr.jaxpr)
+        # the threshold bites: load mode's resident arrays ARE that big
+        loaded = build_serve_engine(model, ss, mode="load").arrays_of(ss)
+        assert any(int(jnp.size(w)) >= thresh
+                   for w in loaded["weights"].values())
+
+    def test_delta_apply_equals_fresh_load(self, served):
+        model, zspecs, state = served
+        state2 = _perturbed(state)
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        for codec in CODECS:
+            s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                                  downlink=codec, dither_word=0)
+            s2 = make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                                  downlink=codec, dither_word=0)
+            swapped = apply_delta(s1, make_delta(s1, s2))
+            for p in s2.words:
+                assert (np.asarray(swapped.words[p])
+                        == np.asarray(s2.words[p])).all(), (codec, p)
+            assert swapped.step == s2.step
+            # words bit-equal => identical generations; run the
+            # generation-level check once (u8) to pin the wiring
+            if codec == "u8":
+                o_fresh = serve_generate(model, s2, prompt, 2, seq_len=8)
+                o_swap = serve_generate(model, swapped, prompt, 2,
+                                        seq_len=8)
+                assert (np.asarray(o_fresh)
+                        == np.asarray(o_swap)).all(), codec
+
+    def test_hot_swap_mid_generation_deterministic(self, served):
+        model, zspecs, state = served
+        state2 = _perturbed(state)
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        s2 = make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        engine = build_serve_engine(model, s1, mode="streaming")
+        step = jax.jit(engine.step)
+        a1 = engine.arrays_of(s1)
+        prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+
+        def run(mid_arrays):
+            cache = engine.init_cache(1, 8)
+            logits = None
+            for t in range(prompt.shape[1]):
+                logits, cache = step(a1, cache, prompt[:, t:t + 1])
+            toks = []
+            arrays = a1
+            for i in range(4):
+                nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+                toks.append(nxt)
+                if i == 1:  # round t+1 broadcast lands mid-generation
+                    arrays = mid_arrays
+                logits, cache = step(arrays, cache, nxt)
+            return jnp.concatenate(toks, axis=1)
+
+        via_delta = run(engine.arrays_of(apply_delta(s1, make_delta(s1, s2))))
+        via_fresh = run(engine.arrays_of(s2))
+        again = run(engine.arrays_of(apply_delta(s1, make_delta(s1, s2))))
+        assert (np.asarray(via_delta) == np.asarray(via_fresh)).all()
+        assert (np.asarray(via_delta) == np.asarray(again)).all()
+
+    def test_delta_guards(self, served):
+        _, zspecs, state = served
+        s_u8 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                                downlink="u8")
+        s_u16 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                                 downlink="u16")
+        with pytest.raises(ValueError):
+            make_delta(s_u8, s_u16)
+        d = make_delta(s_u8, s_u8)
+        with pytest.raises(ValueError):
+            apply_delta(s_u16, d)
+
+    def test_generate_temperature_path(self, served):
+        model, _, _ = served
+        params = model.init_params(jax.random.PRNGKey(0))
+        prompt = jnp.asarray([[1, 2]], jnp.int32)
+        out = generate(model, params, prompt, 3, seq_len=8,
+                       temperature=0.8, key=jax.random.PRNGKey(4))
+        assert out.shape == (1, 5)
+        with pytest.raises(ValueError):
+            generate(model, params, prompt, 3, seq_len=8, temperature=0.8)
+
+    def test_generator_reuse_without_retrace(self, served):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        engine = build_serve_engine(model, ss, mode="streaming")
+        run = make_generator(engine.step, 2)
+        cache = engine.init_cache(1, 8)
+        prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+        a = engine.arrays_of(ss)
+        t1, _ = run(a, cache, prompt, jax.random.PRNGKey(0))
+        t2, _ = run(a, cache, prompt, jax.random.PRNGKey(0))
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        assert t1.shape == (1, 2)
+
+
+class TestDeltaWire:
+    def test_word_delta_roundtrip_bit_patterns(self):
+        for arr in (
+            jnp.asarray([0.0, -0.0, 1.5, -2.25, np.inf], jnp.float32),
+            jnp.asarray([0, 1, 255, 128], jnp.uint8),
+            jnp.asarray([0, 65535, 4097], jnp.uint16),
+        ):
+            new = arr[::-1]
+            patch = word_delta(arr, new)
+            back = apply_word_delta(arr, patch)
+            assert back.dtype == arr.dtype
+            assert (np.asarray(back).view(np.uint8)
+                    == np.asarray(new).view(np.uint8)).all()
+
+    def test_delta_wire_bytes_exact(self):
+        # coordinate list wins when sparse, bitmap when dense
+        assert delta_wire_bytes(1000, 0, 1) == 4
+        assert delta_wire_bytes(1000, 10, 1) == 4 + 10 * 5
+        assert delta_wire_bytes(1000, 500, 1) == 125 + 500
+        # never beats neither encoding's formula
+        for changed in (0, 1, 999, 1000):
+            b = delta_wire_bytes(1000, changed, 2)
+            assert b == min(125 + 2 * changed, 4 + 6 * changed)
+        with pytest.raises(ValueError):
+            delta_wire_bytes(10, 11, 1)
+
+    def test_report_vs_full_broadcast(self, served):
+        _, zspecs, state = served
+        state2 = _perturbed(state)
+        for codec in CODECS:
+            s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                                  downlink=codec, dither_word=0)
+            s2 = make_serve_state(zspecs, state2, jax.random.PRNGKey(2),
+                                  downlink=codec, dither_word=0)
+            rep = delta_report(s1, s2)
+            c = get_codec(codec)
+            full = sum(score_downlink_bytes(c, s.n)
+                       for s in zspecs.specs.values())
+            assert rep["full_bytes"] == full
+            assert rep["delta_bytes"] < rep["full_bytes"] / 8, codec
+            # identical rounds cost only the draw word + per-leaf counts
+            rep0 = delta_report(s1, s1)
+            assert rep0["words_changed"] == 0
+            assert rep0["delta_bytes"] == 4 + 4 * len(zspecs.specs)
+
+
+class TestCheckpointEncodedCarry:
+    def test_u8_carry_roundtrips_without_widening(self, tmp_path, served):
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+
+        _, zspecs, state = served
+        codec = get_codec("u8")
+        words = {p: codec.encode(spec, state["scores"][p], as_word(0))
+                 for p, spec in zspecs.specs.items()}
+        carry = {"scores": words, "dense": state["dense"]}
+        path = str(tmp_path / "ckpt")
+        save_checkpoint(path, carry, meta={"downlink": "u8", "round": 9})
+
+        # the widening template: f32 zeros in the saved structure —
+        # the old loader cast the u8 words to it (4x blow-up AND wire
+        # words reinterpreted as probabilities)
+        template = jax.tree.map(
+            lambda a: jnp.zeros(jnp.shape(a), jnp.float32), carry)
+        restored, meta = load_checkpoint(path, template)
+        assert meta["downlink"] == "u8"
+        assert meta["round"] == 9
+        assert "__leaf_dtypes__" not in meta
+        for p in words:
+            got = restored["scores"][p]
+            assert got.dtype == np.uint8, p
+            assert (np.asarray(got) == np.asarray(words[p])).all(), p
+        for p in state["dense"]:
+            assert restored["dense"][p].dtype == np.float32
