@@ -238,10 +238,56 @@ if not {"f32", "u16", "u8"} <= codecs or bad or fat:
              f"commit.")
 print(f"  ok: {len(dlt)} delta rows, codecs {sorted(codecs)}, worst "
       f"delta/full {max(r['delta_vs_full'] for r in dlt):.4f}")
+
+# serve_batch rows: continuous batching x the hot-block cache.  Every
+# (batch, mode) cell must be measured with the pre-timing bitwise
+# attestation; the cached mode must hold >= 2x pure streaming tok/s at
+# the largest batch (or the tile pool no longer pays for itself), and
+# the converged-round retention row must keep >= 90% of the cache
+# (or drawn-bit invalidation has regressed to word granularity).
+# ``strategy="scheduler"`` rows carry regression_comparable: false
+# (host control-plane pacing) and are excluded, same convention as the
+# interpret-mode Pallas rows.
+BATCH_KEYS = {"tok_s", "us", "strategy", "K", "cache_budget_bytes",
+              "resident_bytes", "cache_bytes"}
+sb = [r for r in rows if r.get("bench") == "serve_batch"
+      and r.get("regression_comparable", True)
+      and r.get("strategy") != "retention"]
+ks = {r["K"] for r in sb}
+strat = {r["strategy"] for r in sb}
+bad = [r for r in sb if not BATCH_KEYS <= set(r)]
+if not {1, 4, 16} <= ks or not {"load", "streaming", "cached"} <= strat \
+        or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: serve_batch rows for "
+             f"B={sorted(ks)} (need 1, 4, 16), strategies "
+             f"{sorted(strat)} (need load, streaming, cached); rows "
+             f"missing keys: {bad}. Run `python -m benchmarks.run "
+             f"--only serve_batch` and commit.")
+if not all(r.get("bit_exact_across_modes") for r in sb):
+    sys.exit("serve_batch rows lost the bit_exact_across_modes "
+             "attestation — the pre-timing equality assert was skipped")
+kmax = max(ks)
+by = {(r["strategy"], r["K"]): r for r in sb}
+speedup = by[("cached", kmax)]["tok_s"] / by[("streaming", kmax)]["tok_s"]
+if speedup < 2:
+    sys.exit(f"hot-block cache speedup collapsed to {speedup:.2f}x over "
+             f"streaming at B={kmax} (need >= 2x)")
+over = [r for r in sb if r["strategy"] == "cached"
+        and r["cache_bytes"] > r["cache_budget_bytes"]]
+if over:
+    sys.exit(f"cached rows exceed their own pool budget: {over}")
+ret = [r for r in rows if r.get("bench") == "serve_batch"
+       and r.get("strategy") == "retention"]
+if len(ret) != 1 or ret[0].get("retained_fraction", 0) < 0.9:
+    sys.exit(f"serve_batch retention row missing or < 0.9: {ret}. Run "
+             f"`python -m benchmarks.run --only serve_batch` and commit.")
+print(f"  ok: {len(sb)} serve_batch rows, B={sorted(ks)}, cached "
+      f"{speedup:.2f}x streaming at B={kmax}, delta retention "
+      f"{ret[0]['retained_fraction']:.3f}")
 EOF
 
 echo "== reconstruction + fused + bwd + wire + downlink + fault + streaming + serve benchmarks -> BENCH_reconstruct.json =="
-python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults,streaming,serve
+python -m benchmarks.run --only kernel,fedround,fused,bwd,threshold,wire,downlink,faults,streaming,serve,serve_batch
 
 echo "== perf baseline =="
 python - <<'EOF'
@@ -293,4 +339,14 @@ for r in rows:
               f"{r['words_changed']:>6}/{r['words_total']} words  "
               f"delta {r['delta_bytes']:>8}B vs full {r['full_bytes']:>8}B "
               f"({r['delta_vs_full']:.4f}x)")
+    elif r.get("bench") == "serve_batch":
+        if r.get("strategy") == "retention":
+            print(f"  sbatch retention: "
+                  f"{r['retained_tiles']}/{r['total_tiles']} tiles "
+                  f"({r['retained_fraction']:.3f}) after 1%-moved round")
+        else:
+            tag = "" if r.get("regression_comparable", True) \
+                else "  [scheduler]"
+            print(f"  sbatch {r['strategy']:>9} B={r['K']:>2}: "
+                  f"{r['tok_s']:6.2f} tok/s{tag}")
 EOF

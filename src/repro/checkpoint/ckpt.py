@@ -11,9 +11,17 @@ codec words — see ``comm/downlink.py``) round-trips at its wire dtype:
 Casting to the template (the old behavior) silently widened a u8
 carry to the caller's f32 template — a 4x artifact blow-up AND a
 corruption: wire words reinterpreted as probabilities.  The template
-fixes only the tree STRUCTURE.  Tag the codec via
-``meta={'downlink': codec.name}`` so a loader can route the words
-without sniffing dtypes.
+fixes only the tree STRUCTURE.
+
+The codec tag is FIRST-CLASS: ``save_checkpoint(...,
+downlink=codec.name)`` validates the name against the codec registry
+and writes it under ``meta['downlink']``; ``checkpoint_downlink``
+reads it back.  Route loaded score words by this tag
+(``serve.state.make_serve_state(..., carried=tag)``), never by dtype
+sniffing — a uint8 array is ambiguous on its own (u8 wire words? u8
+token ids? somebody's quantized activations?), and the dtype-based
+``infer_downlink`` can only say "it LOOKS like u8".  The tag says
+what it IS.
 """
 
 from __future__ import annotations
@@ -26,6 +34,7 @@ import jax
 import numpy as np
 
 _DTYPES_KEY = "__leaf_dtypes__"
+DOWNLINK_KEY = "downlink"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -38,14 +47,36 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return out
 
 
-def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None
-                    ) -> None:
+def save_checkpoint(path: str, tree: Any, meta: Optional[Dict] = None,
+                    *, downlink: Optional[str] = None) -> None:
+    """Write ``tree`` as npz + JSON meta sidecar.
+
+    ``downlink``: the codec name of an encoded score carry in ``tree``
+    — validated against the codec registry and recorded as
+    ``meta['downlink']`` so loaders route the words by tag instead of
+    sniffing dtypes.  A ``downlink`` already present in ``meta`` is
+    validated too (and must agree if both are given).
+    """
+    meta = dict(meta or {})
+    if downlink is not None:
+        if DOWNLINK_KEY in meta and meta[DOWNLINK_KEY] != downlink:
+            raise ValueError(
+                f"conflicting codec tags: downlink={downlink!r} vs "
+                f"meta['downlink']={meta[DOWNLINK_KEY]!r}"
+            )
+        meta[DOWNLINK_KEY] = downlink
+    if DOWNLINK_KEY in meta:
+        from ..comm.downlink import get_codec  # comm sits above ckpt
+
+        get_codec(meta[DOWNLINK_KEY])  # unknown name raises here
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = _flatten(tree)
     np.savez_compressed(path, **arrays)
-    meta = dict(meta or {})
     meta[_DTYPES_KEY] = {k: str(v.dtype) for k, v in arrays.items()}
-    with open(path + ".meta.json", "w") as f:
+    # sidecar name mirrors load_checkpoint whether or not the caller
+    # spelled out the .npz suffix np.savez appends
+    stem = path[:-4] if path.endswith(".npz") else path
+    with open(stem + ".meta.json", "w") as f:
         json.dump(meta, f, indent=2, default=str)
 
 
@@ -74,3 +105,17 @@ def load_checkpoint(path: str, template: Any) -> Tuple[Any, Dict]:
             arr = arr.astype(np.dtype(dtypes[key]))
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def checkpoint_downlink(meta: Dict) -> Optional[str]:
+    """The codec tag of a loaded checkpoint's score carry, validated
+    against the registry; None when the checkpoint predates the tag
+    (fall back to ``core.zampling.infer_downlink`` dtype sniffing at
+    your own risk — u8 words and u8 token ids look alike)."""
+    name = meta.get(DOWNLINK_KEY)
+    if name is None:
+        return None
+    from ..comm.downlink import get_codec
+
+    get_codec(name)
+    return name

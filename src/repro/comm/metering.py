@@ -34,7 +34,7 @@ Per round, per client:
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from .downlink import DownlinkCodec, codec_names, get_codec
 from .protocol import Transport, get_transport, resolve_transport, transport_names
@@ -141,6 +141,75 @@ def streaming_peak_bytes(zspecs, aggregate: str, chunk: int,
     return upload_slab_bytes(zspecs, aggregate, chunk, mode) + acc
 
 
+def serve_tile_pool_bytes(zspecs, cache_budget: int,
+                          bm: Optional[int] = None) -> int:
+    """Allocated bytes of the hot-block tile pool at ``cache_budget``.
+
+    The pool holds ``min(budget // (4·bm), total_tiles)`` rows of
+    4·bm bytes, where total_tiles counts the canonical contraction
+    blocks of every zampled matmul leaf ('embed' streams through the
+    row-gather path and owns no tiles) — the same geometry
+    ``serve.cache.HotBlockCache`` allocates, so this is exact, not an
+    estimate.
+    """
+    from ..kernels import ops  # kernels sit above comm
+
+    bm = bm or ops.SERVE_BM
+    tiles = 0
+    for path, spec in zspecs.specs.items():
+        if path == "embed":
+            continue
+        groups, d_in, d_out = ops.serve_group_dims(spec)
+        _, nblk, _ = ops.serve_block_grid(spec, bm, 0, d_in * d_out)
+        tiles += groups * nblk
+    return min(int(cache_budget) // (4 * bm), tiles) * 4 * bm
+
+
+def serve_resident_bytes(sstate, cache_budget: int = 0, *,
+                         mode: str = "streaming",
+                         kv_cache=None) -> Dict[str, float]:
+    """Exact resident bytes of one serving node — the full picture
+    (words + cache pool + KV), not the words-only figure.
+
+    ``sstate``: a ``serve.state.ServeState`` (duck-typed — needs
+    ``zspecs`` and the byte methods).  ``mode`` picks what the node
+    holds: 'streaming' the encoded words (+ draw word), 'load' the
+    materialized f32 leaves, 'cached' the words PLUS the tile pool at
+    ``cache_budget`` (``serve_tile_pool_bytes``).  ``kv_cache``: the
+    live lane KV cache pytree, metered at its array bytes.  Dense
+    leaves (norms/biases) are resident in every mode.  Cross-check:
+    on backends with memory stats the benchmark's device-peak probe
+    should dominate ``total`` (the analytic figure excludes
+    activations/XLA workspace); on CPU the analytic figure is the
+    only meter.
+    """
+    if mode not in ("load", "streaming", "cached"):
+        raise ValueError(f"unknown serve mode {mode!r}")
+    if mode == "load":
+        zampled = sstate.loaded_zampled_bytes()
+        pool = 0
+    else:
+        zampled = sstate.resident_zampled_bytes()
+        pool = (serve_tile_pool_bytes(sstate.zspecs, cache_budget)
+                if mode == "cached" else 0)
+    kv = 0
+    if kv_cache is not None:
+        import jax
+        import jax.numpy as jnp
+
+        kv = sum(int(jnp.asarray(leaf).nbytes)
+                 for leaf in jax.tree_util.tree_leaves(kv_cache))
+    dense = sstate.dense_bytes()
+    return {
+        "mode": mode,
+        "zampled_bytes": float(zampled),
+        "cache_bytes": float(pool),
+        "kv_bytes": float(kv),
+        "dense_bytes": float(dense),
+        "total_bytes": float(zampled + pool + kv + dense),
+    }
+
+
 def realized_wire_metrics(report: Dict[str, float], uplink_units,
                           cohort_size: int) -> Dict:
     """Scale a round's exact per-client byte counts by the REALIZED
@@ -216,6 +285,7 @@ __all__ = [
     "mask_uplink_bytes", "score_downlink_bytes", "delta_wire_bytes",
     "round_wire_report",
     "realized_wire_metrics", "upload_slab_bytes", "streaming_peak_bytes",
+    "serve_resident_bytes", "serve_tile_pool_bytes",
     "wire_table", "downlink_table",
     "get_transport", "get_codec",
 ]

@@ -921,11 +921,12 @@ def _serve_contract_blocks(spec: QSpec, x, row_offset, d_in, d_out, bm,
                            w_blk_fn):
     """The canonical window-blocked contraction (see section comment).
 
-    ``w_blk_fn(rows (bm,) int32, live (bm,) bool) -> (bm,) f32`` yields
-    the block's weight values with exact +0.0 at dead rows.  Every
-    serve impl and the qz_decode kernels replay THIS tree — identical
-    tile shapes, operand values, and accumulation order — so their
-    float sums agree bit-for-bit.
+    ``w_blk_fn(rows (bm,) int32, live (bm,) bool, t () int32) -> (bm,)
+    f32`` yields block ``t``'s weight values with exact +0.0 at dead
+    rows (``t`` is the canonical grid index — the hot-block cache keys
+    its tiles by it).  Every serve impl and the qz_decode kernels
+    replay THIS tree — identical tile shapes, operand values, and
+    accumulation order — so their float sums agree bit-for-bit.
     """
     sub = d_in * d_out
     ni = serve_tile_rows(bm, d_out)
@@ -942,7 +943,7 @@ def _serve_contract_blocks(spec: QSpec, x, row_offset, d_in, d_out, bm,
         rows = bstart + lane
         live = ((rows >= row_offset) & (rows < row_offset + sub)
                 & (j * bm + lane < rpw) & (rows < spec.m))
-        w_blk = w_blk_fn(rows, live)
+        w_blk = w_blk_fn(rows, live, t)
         i_lo = jnp.clip(bstart - row_offset, 0, sub - 1) // d_out
         pos = jnp.where(live, rows - row_offset - i_lo * d_out,
                         ni * d_out)
@@ -967,7 +968,8 @@ def _serve_contract_chunked(spec: QSpec, p, step, x, row_offset, d_in,
     (bm,) weight values from the encoded words and is consumed by the
     tile dot in place — peak temporaries O(bm·d), no W_g anywhere."""
 
-    def w_blk_fn(rows, live):
+    def w_blk_fn(rows, live, t):
+        del t
         w = _serve_edge_weights(spec, p, step, rows, qbits)
         return jnp.where(live, w, 0.0)
 
@@ -983,8 +985,41 @@ def _serve_contract_resident(spec: QSpec, W, x, row_offset, d_in, d_out,
     Wf = jnp.pad(jnp.asarray(W).reshape(-1).astype(jnp.float32),
                  (0, spec.rows_per_window + bm))
 
-    def w_blk_fn(rows, live):
+    def w_blk_fn(rows, live, t):
+        del t
         return jnp.where(live, jnp.take(Wf, rows), 0.0)
+
+    return _serve_contract_blocks(spec, x, row_offset, d_in, d_out, bm,
+                                  w_blk_fn)
+
+
+def _serve_contract_cached(spec: QSpec, p, step, x, row_offset, d_in,
+                           d_out, qbits, bm, pool, slots):
+    """Hot-block-cache path: per canonical block, a ``lax.cond`` on the
+    block's cache slot — a resident tile gather on a hit, the streaming
+    regeneration on a miss.  Both branches produce the identical (bm,)
+    values (the pool is filled by ``serve_fill_tiles``, which computes
+    the miss branch's exact expression), so any slot assignment —
+    empty, partial, or full — yields bit-identical output; the cache
+    budget moves only the latency point.
+
+    ``pool``: (S, bm) f32 global tile pool (S >= 1); ``slots``: (nblk,)
+    int32 slot per canonical block of THIS group, -1 = uncached.  Both
+    are jit arguments, so fills/evictions/invalidations never
+    recompile.
+    """
+
+    def w_blk_fn(rows, live, t):
+        slot = slots[t]
+
+        def hit(_):
+            return jax.lax.dynamic_index_in_dim(pool, slot, keepdims=False)
+
+        def miss(_):
+            w = _serve_edge_weights(spec, p, step, rows, qbits)
+            return jnp.where(live, w, 0.0)
+
+        return jax.lax.cond(slot >= 0, hit, miss, None)
 
     return _serve_contract_blocks(spec, x, row_offset, d_in, d_out, bm,
                                   w_blk_fn)
@@ -1061,6 +1096,74 @@ def serve_matmul(spec: QSpec, words, step, X, *, group: int = 0,
         raise ValueError(f"serve_matmul takes X (B, d_in), got {X.shape}")
     return _serve_contract(spec, words, step, X, int(group), qbits, impl,
                            int(bm))
+
+
+def serve_cached_matmul(spec: QSpec, words, step, X, pool, slots, *,
+                        group: int = 0, qbits: Optional[int] = None,
+                        bm: int = SERVE_BM):
+    """Streamed Y = X @ W_g with the hot-block cache in the loop.
+
+    ``pool`` (S, bm) f32 and ``slots`` (nblk,) int32 come from
+    ``serve.cache.HotBlockCache`` (slice its per-leaf slot map at
+    ``group``).  Bit-identical to ``serve_matmul`` at every cache
+    occupancy — a hit swaps WHERE a block's values come from, never
+    what they are or how they are summed.
+    """
+    if X.ndim != 2:
+        raise ValueError(
+            f"serve_cached_matmul takes X (B, d_in), got {X.shape}"
+        )
+    groups, d_in, d_out = serve_group_dims(spec)
+    group = int(group)
+    if not 0 <= group < groups:
+        raise ValueError(f"group {group} out of range [0, {groups})")
+    if X.shape[-1] != d_in:
+        raise ValueError(
+            f"activation has trailing dim {X.shape[-1]}, spec group "
+            f"expects d_in={d_in}"
+        )
+    p = _serve_operand(spec, words, qbits)
+    return _serve_contract_cached(spec, p, step, X, group * d_in * d_out,
+                                  d_in, d_out, qbits, int(bm), pool,
+                                  slots)
+
+
+def serve_fill_tiles(spec: QSpec, words, step, groups_idx, blocks, *,
+                     qbits: Optional[int] = None, bm: int = SERVE_BM):
+    """Batched tile fill: materialize T canonical blocks' weight values.
+
+    ``groups_idx`` / ``blocks`` are (T,) int32 (group, canonical block
+    index) pairs; returns (T, bm) f32 tiles with exact +0.0 at dead
+    lanes — the same values ``serve_matmul``'s miss path regenerates
+    for those blocks, computed in ONE vectorized ``_serve_edge_weights``
+    call (no full-leaf materialization, peak temporaries O(T·bm·d)).
+    The hot-block cache's fill path: pool rows written from here are
+    bit-identical to the streaming regeneration they replace.
+    """
+    groups, d_in, d_out = serve_group_dims(spec)
+    sub = d_in * d_out
+    rpw = spec.rows_per_window
+    bpw = max(1, -(-rpw // bm))
+    g = jnp.asarray(groups_idx, jnp.int32)
+    t = jnp.asarray(blocks, jnp.int32)
+    if g.shape != t.shape or g.ndim != 1:
+        raise ValueError(
+            f"groups_idx/blocks must be matching (T,) arrays, got "
+            f"{g.shape} vs {t.shape}"
+        )
+    row_offset = g * sub
+    w0 = row_offset // rpw
+    j = t % bpw
+    bstart = (w0 + t // bpw) * rpw + j * bm
+    lane = jnp.arange(bm, dtype=jnp.int32)
+    rows = bstart[:, None] + lane[None, :]
+    live = ((rows >= row_offset[:, None])
+            & (rows < row_offset[:, None] + sub)
+            & ((j * bm)[:, None] + lane[None, :] < rpw)
+            & (rows < spec.m))
+    p = _serve_operand(spec, words, qbits)
+    w = _serve_edge_weights(spec, p, step, rows, qbits)
+    return jnp.where(live, w, 0.0)
 
 
 def _serve_resident_dims(spec: QSpec, group: int, x):

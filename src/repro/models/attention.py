@@ -190,6 +190,48 @@ def decode_attend(q, k, v, cache: KVCache, dims: AttnDims):
     return out.reshape(B, 1, -1), KVCache(new_k, new_v, pos + 1)
 
 
+def decode_attend_lanes(q, k, v, cache: KVCache, dims: AttnDims, live):
+    """Per-lane decode attention for the continuous-batching engine.
+
+    Same cache write / ring-buffer mask / SDPA plumbing as
+    ``decode_attend`` but with ``cache.pos`` carrying a PER-LANE (B,)
+    position and ``live`` a (B,) bool admission mask: dead lanes write
+    nothing and hold position (their outputs are ignored by the
+    scheduler), live lanes behave exactly as lane 0 of the scalar path
+    — elementwise ops are lane-independent and the SDPA einsums batch
+    over lanes without cross-lane reduction, so a lane's bits equal the
+    single-request (B=1) decode at the same position and KV capacity
+    (pinned in tests/test_serve_batch.py).  Stale KV from a lane's
+    previous occupant sits beyond the validity mask (abs_pos > pos) and
+    contributes exact zeros through the softmax, so lane recycling
+    needs no cache zeroing and never recompiles.
+    """
+    B = q.shape[0]
+    C = cache.k.shape[1]
+    pos = cache.pos  # (B,) absolute position of each lane's new token
+    live = jnp.asarray(live, bool)
+    slot = pos % C if dims.window is not None else jnp.minimum(pos, C - 1)
+    oh = ((jnp.arange(C)[None, :] == slot[:, None]) & live[:, None])
+    ohf = oh.astype(cache.k.dtype)[:, :, None, None]
+    new_k = cache.k * (1 - ohf) + ohf * k
+    new_v = cache.v * (1 - ohf) + ohf * v
+    slots = jnp.arange(C)[None, :]
+    if dims.window is not None:
+        cycle = ((pos // C) * C)[:, None]
+        abs_pos = jnp.where(slots <= slot[:, None], cycle + slots,
+                            cycle - C + slots)
+    else:
+        abs_pos = jnp.broadcast_to(slots, (B, C))
+    valid = (abs_pos <= pos[:, None]) & (abs_pos >= 0)
+    if dims.window is not None:
+        valid = valid & (abs_pos > pos[:, None] - dims.window)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    out = _sdpa(q, new_k, new_v, mask[:, None, None, :],
+                dims.n_heads // dims.n_kv)
+    new_pos = jnp.where(live, pos + 1, pos)
+    return out.reshape(B, 1, -1), KVCache(new_k, new_v, new_pos)
+
+
 def decode_self_attention(params, x, cache: KVCache, dims: AttnDims):
     """One-token decode: x (B, 1, d). Ring-buffer write under SWA."""
     B = x.shape[0]

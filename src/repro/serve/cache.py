@@ -1,0 +1,334 @@
+"""Hot-block tile cache: the budgeted midpoint of the load/stream trade.
+
+PR 8 left serving with a binary choice: ``mode="load"`` holds 32 bits
+per weight and decodes fast, ``mode="streaming"`` holds only the
+encoded score words and regenerates every (window, bm) weight block
+inside the contraction, ~3-7x slower on CPU.  This module makes the
+trade a DIAL: a byte-budgeted pool of materialized f32 tiles — one
+pool row per canonical contraction block (``kernels/ops.py`` serve
+section; key (path, group, block)) — sitting between the two extremes.
+
+ - ``cache_budget_bytes = 0``  → pure streaming (no tile resident);
+ - ``cache_budget_bytes >= 4·m`` of the zampled leaves → fully loaded
+   (every block hits the pool at resident-matmul speed);
+ - anything between → the first ``budget // (4·bm)`` canonical tiles
+   serve resident, the rest stream.
+
+Bit-exactness is free by construction: a pool row is written by
+``ops.serve_fill_tiles``, which computes the exact expression the
+streaming miss branch regenerates, and ``ops.serve_cached_matmul``
+replays the canonical contraction tree choosing per block only WHERE
+its (bm,) values come from.  Every occupancy — empty, partial, full,
+post-invalidation — therefore produces logits bit-identical to
+streaming and to reconstruct-on-load (asserted in
+tests/test_serve_batch.py and pre-timing in every ``serve_batch``
+bench row).
+
+Jit discipline: the pool (S, bm) and the per-leaf slot maps
+(groups, nblk) int32 are fixed-shape JIT ARGUMENTS of the engine step
+(like the score words themselves), so fills, clock evictions, and
+delta invalidations never recompile.  The manager below is host-side
+numpy; the decode step only ever sees the current (pool, slots)
+snapshot via ``arrays()``.
+
+Counters: the decode access pattern is dense — every engine step
+contracts every block of every zampled linear exactly once — so
+hit/miss counts are analytic (``record_step``), not instrumented
+inside jit; fills/evictions/invalidations are counted where they
+happen on the host.  ``serve.delta.apply_delta(..., cache=...)`` is
+the invalidation entry point: only tiles whose DRAWN MASK BITS
+actually flip (changed word AND flipped Bernoulli bit — see
+serve/delta.py) are dropped, so a converged round's delta leaves the
+cache ~intact instead of cold.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .state import ServeState
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Operator-facing serving knobs (``core.federated.FederatedConfig``
+    style: a validated frozen dataclass the whole serve stack reads).
+
+    ``lanes``: fixed batch width of the continuous-batching scheduler;
+    ``seq_len``: per-lane KV capacity (admission resets a lane's
+    position, stale KV is masked — no reallocation, no recompile);
+    ``cache_budget_bytes``: hot-block pool budget, the load/stream
+    dial; ``mode``: engine weight-sourcing mode ('cached' engages the
+    pool); ``impl``: streaming kernel impl override (ref/chunked/
+    pallas; None = ``REPRO_SERVE_IMPL`` or 'chunked');
+    ``max_new_tokens``: per-request generation cap default.
+    """
+
+    lanes: int = 4
+    seq_len: int = 128
+    cache_budget_bytes: int = 0
+    mode: str = "cached"
+    impl: Optional[str] = None
+    max_new_tokens: int = 32
+
+    def __post_init__(self):
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
+        if self.seq_len < 1:
+            raise ValueError(f"seq_len must be >= 1, got {self.seq_len}")
+        if self.cache_budget_bytes < 0:
+            raise ValueError(
+                f"cache_budget_bytes must be >= 0, got "
+                f"{self.cache_budget_bytes}"
+            )
+        if self.mode not in ("load", "streaming", "cached"):
+            raise ValueError(f"unknown serve mode {self.mode!r}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}"
+            )
+
+
+@dataclass
+class _LeafGrid:
+    """Static canonical-block geometry of one cacheable leaf."""
+
+    spec: Any
+    groups: int
+    nblk: int  # canonical blocks per group
+    bpw: int  # blocks per window
+    w0: np.ndarray  # (groups,) first window of each group
+
+
+class HotBlockCache:
+    """Host-side manager of the (pool, slot-map) tile cache.
+
+    Mutable by design — fills, evictions, and invalidations rewrite the
+    numpy slot maps and the device pool rows in place; the engine step
+    consumes snapshots via ``arrays()``.  Not thread-safe (one serving
+    scheduler owns one cache).
+    """
+
+    def __init__(self, sstate: ServeState, budget_bytes: int, *,
+                 bm: int = ops.SERVE_BM):
+        self.bm = int(bm)
+        self.tile_bytes = 4 * self.bm
+        self.budget_bytes = int(budget_bytes)
+        self.qbits = sstate.qbits
+        # cacheable leaves: every zampled matmul leaf.  'embed' streams
+        # through the row-gather path (serve_embed_rows), which never
+        # runs the blocked contraction — nothing to cache there.
+        self.grids: Dict[str, _LeafGrid] = {}
+        for path in sorted(sstate.zspecs.specs):
+            if path == "embed":
+                continue
+            spec = sstate.zspecs.specs[path]
+            groups, d_in, d_out = ops.serve_group_dims(spec)
+            sub = d_in * d_out
+            w0s, nblk0, bpw = ops.serve_block_grid(spec, self.bm, 0, sub)
+            w0 = np.empty(groups, np.int64)
+            for g in range(groups):
+                wg, nblk, bpw_g = ops.serve_block_grid(
+                    spec, self.bm, g * sub, sub)
+                assert nblk == nblk0 and bpw_g == bpw
+                w0[g] = wg
+            self.grids[path] = _LeafGrid(spec=spec, groups=groups,
+                                         nblk=nblk0, bpw=bpw, w0=w0)
+        self.total_tiles = sum(g.groups * g.nblk
+                               for g in self.grids.values())
+        # never allocate past the model: budget >= 4·m caps at exactly
+        # one pool row per canonical tile (fully loaded)
+        self.capacity = min(self.budget_bytes // self.tile_bytes,
+                            self.total_tiles)
+        # pool keeps >= 1 row so the hit branch of the cached
+        # contraction traces at budget 0 too (it just never executes)
+        self._pool = jnp.zeros((max(self.capacity, 1), self.bm),
+                               jnp.float32)
+        self.slots: Dict[str, np.ndarray] = {
+            p: np.full((g.groups, g.nblk), -1, np.int32)
+            for p, g in self.grids.items()
+        }
+        # slot k's owner as (path index, group, block); -1 = free
+        self._paths: List[str] = list(self.grids)
+        self._owner = np.full((max(self.capacity, 1), 3), -1, np.int64)
+        self._ref = np.zeros(max(self.capacity, 1), bool)
+        self._hand = 0
+        self.counters = {"hits": 0, "misses": 0, "fills": 0,
+                         "evictions": 0, "invalidations": 0}
+        self._device_slots: Optional[Dict[str, Any]] = None
+
+    # --- accounting -----------------------------------------------------
+    @property
+    def resident_tiles(self) -> int:
+        return int((self._owner[:self.capacity, 0] >= 0).sum())
+
+    @property
+    def capacity_bytes(self) -> int:
+        """Allocated pool bytes (what the budget actually buys)."""
+        return self.capacity * self.tile_bytes
+
+    @property
+    def used_bytes(self) -> int:
+        return self.resident_tiles * self.tile_bytes
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            **self.counters,
+            "resident_tiles": self.resident_tiles,
+            "total_tiles": self.total_tiles,
+            "capacity_tiles": self.capacity,
+            "capacity_bytes": self.capacity_bytes,
+            "used_bytes": self.used_bytes,
+        }
+
+    def record_step(self, n_steps: int = 1) -> None:
+        """Analytic hit/miss accounting for ``n_steps`` engine steps.
+
+        Each decode step contracts every canonical block of every
+        cacheable leaf exactly once (the dense decode access pattern),
+        so per step: hits = resident tiles, misses = the rest.  Also
+        the clock 'touch': every resident tile's reference bit is set.
+        """
+        r = self.resident_tiles
+        self.counters["hits"] += r * n_steps
+        self.counters["misses"] += (self.total_tiles - r) * n_steps
+        self._ref[self._owner[:, 0] >= 0] = True
+
+    # --- slot allocation (clock) ----------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        free = np.nonzero(self._owner[:self.capacity, 0] < 0)[0]
+        return int(free[0]) if free.size else None
+
+    def _evict_clock(self) -> int:
+        """Second-chance clock: clear ref bits until an unreferenced
+        resident slot comes under the hand; evict it."""
+        assert self.capacity > 0
+        for _ in range(2 * self.capacity + 1):
+            k = self._hand
+            self._hand = (self._hand + 1) % self.capacity
+            if self._owner[k, 0] < 0:
+                continue
+            if self._ref[k]:
+                self._ref[k] = False
+                continue
+            pi, g, t = self._owner[k]
+            self.slots[self._paths[pi]][g, t] = -1
+            self._owner[k] = -1
+            self.counters["evictions"] += 1
+            self._device_slots = None
+            return k
+        raise RuntimeError("clock found no evictable slot")
+
+    # --- fill -----------------------------------------------------------
+    def _uncached_blocks(self) -> List[Tuple[int, int, int]]:
+        out = []
+        for pi, path in enumerate(self._paths):
+            g, t = np.nonzero(self.slots[path] < 0)
+            out.extend((pi, int(gg), int(tt)) for gg, tt in zip(g, t))
+        return out
+
+    def fill(self, sstate: ServeState, *, limit: Optional[int] = None,
+             evict: bool = False) -> int:
+        """Materialize uncached tiles into the pool, canonical order.
+
+        By default fills only FREE slots (the steady decode pattern
+        touches every resident tile every step, so clock eviction to
+        admit a new tile would thrash); ``evict=True`` lets the clock
+        make room — the shifting-workload policy.  Returns tiles
+        filled.  One ``serve_fill_tiles`` batch per leaf — no full-leaf
+        materialization.
+        """
+        if self.capacity == 0:
+            return 0
+        want = self._uncached_blocks()
+        if limit is not None:
+            want = want[:limit]
+        per_path: Dict[int, List[Tuple[int, int, int]]] = {}
+        filled = 0
+        for pi, g, t in want:
+            slot = self._free_slot()
+            if slot is None:
+                if not evict:
+                    break
+                slot = self._evict_clock()
+            self._owner[slot] = (pi, g, t)
+            self.slots[self._paths[pi]][g, t] = slot
+            self._ref[slot] = True
+            per_path.setdefault(pi, []).append((slot, g, t))
+            filled += 1
+        for pi, entries in per_path.items():
+            path = self._paths[pi]
+            grid = self.grids[path]
+            ks = jnp.asarray([e[0] for e in entries], jnp.int32)
+            gs = jnp.asarray([e[1] for e in entries], jnp.int32)
+            ts = jnp.asarray([e[2] for e in entries], jnp.int32)
+            tiles = ops.serve_fill_tiles(grid.spec, sstate.words[path],
+                                         sstate.step, gs, ts,
+                                         qbits=self.qbits, bm=self.bm)
+            self._pool = self._pool.at[ks].set(tiles)
+        if filled:
+            self.counters["fills"] += filled
+            self._device_slots = None
+        return filled
+
+    # --- invalidation ---------------------------------------------------
+    def invalidate_windows(self, path: str, flipped: np.ndarray) -> int:
+        """Drop every tile of ``path`` whose source window's drawn bits
+        flipped.  ``flipped``: (num_windows,) bool.  A canonical block
+        reads z coordinates of exactly ONE window (w0[g] + t // bpw),
+        so window granularity is exact tile granularity.  Returns
+        tiles invalidated."""
+        grid = self.grids.get(path)
+        if grid is None:
+            return 0
+        flipped = np.asarray(flipped, bool)
+        t = np.arange(grid.nblk)
+        win = grid.w0[:, None] + t[None, :] // grid.bpw  # (groups, nblk)
+        kill = flipped[win] & (self.slots[path] >= 0)
+        n = int(kill.sum())
+        if n:
+            dead = self.slots[path][kill]
+            self._owner[dead] = -1
+            self._ref[dead] = False
+            self.slots[path][kill] = -1
+            self.counters["invalidations"] += n
+            self._device_slots = None
+        return n
+
+    def invalidate_all(self) -> int:
+        """Full drop (codec change, draw-word change, leaf-set change)."""
+        n = self.resident_tiles
+        for path in self._paths:
+            self.slots[path][:] = -1
+        self._owner[:] = -1
+        self._ref[:] = False
+        if n:
+            self.counters["invalidations"] += n
+            self._device_slots = None
+        return n
+
+    # --- the jit-visible snapshot ---------------------------------------
+    def arrays(self) -> Dict[str, Any]:
+        """{"pool": (S, bm) f32, "slots": {path: (groups, nblk) i32}} —
+        the fixed-shape jit arguments the cached engine step takes."""
+        if self._device_slots is None:
+            self._device_slots = {p: jnp.asarray(s)
+                                  for p, s in self.slots.items()}
+        return {"pool": self._pool, "slots": self._device_slots}
+
+
+def build_cache(sstate: ServeState, config: ServeConfig, *,
+                warm: bool = True) -> HotBlockCache:
+    """Construct (and by default warm) the hot-block cache for a
+    serving node: fills the first ``budget // (4·bm)`` canonical tiles
+    — 'first touch' under the dense decode pattern is simply canonical
+    order."""
+    cache = HotBlockCache(sstate, config.cache_budget_bytes)
+    if warm:
+        cache.fill(sstate)
+    return cache

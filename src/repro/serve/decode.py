@@ -1,6 +1,7 @@
 """Serving: scan-driven generation, with a Zampling-native engine.
 
-Two ways to serve a zampled model:
+Three ways to source a zampled linear's weights at decode time — one
+engine, one canonical contraction, three residency points:
 
  - ``mode="load"`` — reconstruct every zampled leaf once at startup
    (``serve.state.reconstruct_resident``) and decode against the
@@ -13,24 +14,45 @@ Two ways to serve a zampled model:
    weight tensor ever exists (jaxpr-asserted in tests/test_serve.py);
    resident zampled bytes drop from 32m to the wire size of the codec
    words (n·codec.bits bits).
+ - ``mode="cached"`` — streaming plus the hot-block tile pool
+   (``serve.cache``): each canonical block either gathers its
+   materialized (bm,) tile from the pool (resident-matmul speed) or
+   falls back to the streaming regeneration, per a slot map filled
+   under ``ServeConfig.cache_budget_bytes``.  Budget 0 IS streaming;
+   budget >= 4·m IS load; anything between is a dialable point on the
+   resident-bytes/latency frontier.
 
-The two modes are BIT-IDENTICAL: both run the same engine code
-(layers unrolled in Python — a lax.scan over layers lets XLA fuse the
-norm reductions differently and breaks bitwise equality) and both
-contract every zampled linear through the canonical blocked tree
-(``kernels/ops.py`` serve section); they differ only in where each
-block's weight values come from.  That makes streaming-vs-load a pure
-memory/latency trade with zero output risk, and makes a delta
-hot-swap (``serve.delta.apply_delta``) equivalent to restarting the
-server on the new round's broadcast.
+All modes are BIT-IDENTICAL at every cache occupancy: they run the
+same engine code (layers unrolled in Python — a lax.scan over layers
+lets XLA fuse the norm reductions differently and breaks bitwise
+equality) and contract every zampled linear through the canonical
+blocked tree (``kernels/ops.py`` serve section); they differ only in
+where each block's weight values come from.  That makes the budget
+knob a pure memory/latency trade with zero output risk, and makes a
+delta hot-swap (``serve.delta.apply_delta``) equivalent to restarting
+the server on the new round's broadcast — with the cache SURVIVING
+the swap minus only the tiles whose drawn bits actually flipped.
+
+Batching: the engine step serves either a single request (scalar
+``cache.pos`` — the PR-8 path, bit-for-bit unchanged) or a fixed-lane
+batch (``init_lane_cache``: per-lane (B,) positions plus a (B,) live
+mask threaded to ``models.attention.decode_attend_lanes``).  Lane
+admission just resets that lane's position — stale KV from the
+previous occupant sits beyond the validity mask and contributes exact
+zeros, so the continuous-batching scheduler (``serve.scheduler``)
+admits/retires requests per step without reallocation or recompile.
+Per-lane bits equal the single-request decode at the same position
+and KV capacity, which is what lets the scheduler's throughput wins
+come with a bitwise-equality guarantee.
 
 Generation is a jitted ``lax.scan`` pair — a cache-building prefill
 scan over the prompt (the decoder's ``model.prefill`` is logits-only
-and returns no cache, so scanning ``decode_step`` IS the cache-honest
+and returns no cache, so scanning the decode step IS the cache-honest
 prefill at serving time) and a greedy/temperature generation scan —
 so serving benches measure decode, not Python-loop dispatch.  Engine
 arrays travel as jit ARGUMENTS (never closure constants): swapping in
-a delta-patched ``ServeState`` reuses the compiled step.
+a delta-patched ``ServeState`` — or a refilled/invalidated cache
+snapshot — reuses the compiled step.
 """
 
 from __future__ import annotations
@@ -56,9 +78,12 @@ def make_generator(step_fn, max_new_tokens: int, temperature: float = 0.0):
     cache)``: a prefill scan feeding the prompt token-by-token through
     the step (building the KV cache), then a generation scan sampling
     ``max_new_tokens`` greedily (``temperature == 0``) or from the
-    tempered logits with ``fold_in(key, i)`` per position.  Reuse the
-    returned callable across calls — each ``make_generator`` call
-    traces fresh.
+    tempered logits with ``fold_in(key, i)`` per position.  Works with
+    both cache layouts the engine step accepts — a scalar-position
+    cache (single request) or a lane cache from ``init_lane_cache``
+    (equal-length prompts decode in lockstep; for ragged admission use
+    ``serve.scheduler``).  Reuse the returned callable across calls —
+    each ``make_generator`` call traces fresh.
     """
 
     def select(logits, key, i):
@@ -133,16 +158,22 @@ def generate(
 class ServeEngine(NamedTuple):
     """A compiled-shape serving plan for one (model, ServeState) pair.
 
-    ``step(arrays, cache, tok (B, 1)) -> (logits (B, 1, V), cache)``;
-    ``arrays_of(sstate)`` builds the jit-visible arrays for any state
-    sharing this engine's zspecs/codec (THE hot-swap path: feed a
-    delta-patched state's arrays to the same compiled step);
-    ``init_cache(B, seq_len)`` the matching KV cache.
+    ``step(arrays, cache, tok (B, 1), live=None) -> (logits (B, 1, V),
+    cache)`` — ``cache.pos`` scalar selects the single-request path
+    (PR-8 bit-compat), (B,) the per-lane batched path with optional
+    (B,) ``live`` admission mask; ``arrays_of(sstate, cache=None)``
+    builds the jit-visible arrays for any state sharing this engine's
+    zspecs/codec, merging the hot-block pool snapshot in
+    ``mode="cached"`` (THE hot-swap path: feed a delta-patched state's
+    arrays — and the delta-invalidated cache's snapshot — to the same
+    compiled step); ``init_cache(B, seq_len)`` the single-request KV
+    cache, ``init_lane_cache(lanes, seq_len)`` the per-lane one.
     """
 
     step: Callable[..., Any]
-    arrays_of: Callable[[ServeState], Dict[str, Any]]
+    arrays_of: Callable[..., Dict[str, Any]]
     init_cache: Callable[[int, int], Any]
+    init_lane_cache: Callable[[int, int], Any]
     mode: str
 
 
@@ -152,13 +183,14 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
     """Build the serving decode step for a dense-family decoder.
 
     Layers are unrolled in Python and every zampled linear goes
-    through the canonical serve contraction, so ``mode="load"`` and
-    ``mode="streaming"`` produce bit-identical logits (the load/
-    streaming trade is memory-only).  ``impl`` picks the streaming
-    kernel impl (ref/chunked/pallas; default ``REPRO_SERVE_IMPL`` or
-    'chunked').
+    through the canonical serve contraction, so ``mode="load"``,
+    ``mode="streaming"`` and ``mode="cached"`` produce bit-identical
+    logits at any cache occupancy (the residency choice is
+    memory-only).  ``impl`` picks the streaming kernel impl
+    (ref/chunked/pallas; default ``REPRO_SERVE_IMPL`` or 'chunked');
+    the cached mode's hit branch is pure jnp whatever the impl.
     """
-    if mode not in ("load", "streaming"):
+    if mode not in ("load", "streaming", "cached"):
         raise ValueError(f"unknown serve mode {mode!r}")
     cfg = model.cfg
     if cfg.family not in ("dense", "vlm") or cfg.moe is not None:
@@ -180,11 +212,19 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
                 f"{path!r}"
             )
 
-    def arrays_of(s: ServeState) -> Dict[str, Any]:
+    def arrays_of(s: ServeState, cache=None) -> Dict[str, Any]:
         if mode == "load":
             return {"weights": reconstruct_resident(s),
                     "dense": dict(s.dense)}
-        return s.arrays()
+        out = s.arrays()
+        if mode == "cached":
+            if cache is None:
+                raise ValueError(
+                    "mode='cached' needs the HotBlockCache snapshot: "
+                    "arrays_of(sstate, cache=hot_block_cache)"
+                )
+            out.update(cache.arrays())
+        return out
 
     def linear(arrays, path, layer, x2d):
         """x2d (B, d_in) @ leaf[layer] -> (B, d_out)."""
@@ -197,6 +237,12 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
         if mode == "load":
             return ops.serve_resident_matmul(spec, arrays["weights"][path],
                                              x2d, group=layer)
+        if mode == "cached":
+            return ops.serve_cached_matmul(spec, arrays["words"][path],
+                                           arrays["step"], x2d,
+                                           arrays["pool"],
+                                           arrays["slots"][path][layer],
+                                           group=layer, qbits=qbits)
         return ops.serve_matmul(spec, arrays["words"][path],
                                 arrays["step"], x2d, group=layer,
                                 qbits=qbits, impl=impl)
@@ -219,11 +265,18 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
     if dims.qk_norm:
         attn_extras += ["q_norm", "k_norm"]
 
-    def step(arrays, cache, tokens):
+    def step(arrays, cache, tokens, live=None):
         x = embed_rows(arrays, tokens)  # (B, 1, D)
         B = x.shape[0]
-        positions = jnp.broadcast_to(cache.pos[None, None], (B, 1))
+        lanes = cache.pos.ndim == 1
+        if lanes:
+            lv = (jnp.ones((B,), bool) if live is None
+                  else jnp.asarray(live, bool))
+            positions = cache.pos[:, None]
+        else:
+            positions = jnp.broadcast_to(cache.pos[None, None], (B, 1))
         nk, nv = [], []
+        new_pos = cache.pos
         for l in range(L):
             h = rms_norm(x, dlayer(arrays, "blocks/ln1", l)).reshape(B, -1)
             q = linear(arrays, "blocks/attn/wq", l, h)[:, None, :]
@@ -233,7 +286,11 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
                   for e in attn_extras}
             q, k, v = attn.finish_qkv(ap, q, k, v, dims, positions)
             lc = KVCache(k=cache.k[l], v=cache.v[l], pos=cache.pos)
-            out, nc = attn.decode_attend(q, k, v, lc, dims)
+            if lanes:
+                out, nc = attn.decode_attend_lanes(q, k, v, lc, dims, lv)
+            else:
+                out, nc = attn.decode_attend(q, k, v, lc, dims)
+            new_pos = nc.pos
             x = x + linear(arrays, "blocks/attn/wo", l,
                            out.reshape(B, -1))[:, None, :]
             hm = rms_norm(x, dlayer(arrays, "blocks/ln2", l)).reshape(B, -1)
@@ -246,13 +303,18 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
         x = rms_norm(x, arrays["dense"]["final_norm"])
         logits = linear(arrays, "lm_head", 0, x.reshape(B, -1))[:, None, :]
         return logits, KVCache(k=jnp.stack(nk), v=jnp.stack(nv),
-                               pos=cache.pos + 1)
+                               pos=new_pos)
 
     def init_cache(batch_size: int, seq_len: int):
         return model.init_cache(None, batch_size, seq_len)
 
+    def init_lane_cache(lanes: int, seq_len: int):
+        c = model.init_cache(None, lanes, seq_len)
+        return c._replace(pos=jnp.zeros((lanes,), jnp.int32))
+
     return ServeEngine(step=step, arrays_of=arrays_of,
-                       init_cache=init_cache, mode=mode)
+                       init_cache=init_cache,
+                       init_lane_cache=init_lane_cache, mode=mode)
 
 
 def serve_generate(
@@ -266,19 +328,22 @@ def serve_generate(
     seq_len: Optional[int] = None,
     temperature: float = 0.0,
     key=None,
+    cache=None,
 ):
     """Generate from a ServeState. Returns (B, Sp+new) tokens.
 
     ``mode="streaming"`` never materializes a weight tensor;
-    ``mode="load"`` reconstructs once and serves resident.  Outputs
-    are bit-identical across modes.
+    ``mode="load"`` reconstructs once and serves resident;
+    ``mode="cached"`` serves through the hot-block pool (pass the
+    warmed ``serve.cache.HotBlockCache`` as ``cache``).  Outputs are
+    bit-identical across modes and cache occupancies.
     """
     engine = build_serve_engine(model, sstate, mode=mode, impl=impl)
     B, Sp = prompt.shape
     seq_len = seq_len or (Sp + max_new_tokens)
-    cache = engine.init_cache(B, seq_len)
+    kv = engine.init_cache(B, seq_len)
     run = make_generator(engine.step, max_new_tokens, temperature)
-    new, _ = run(engine.arrays_of(sstate), cache, prompt,
+    new, _ = run(engine.arrays_of(sstate, cache=cache), kv, prompt,
                  _check_key(temperature, key))
     return jnp.concatenate([prompt, new.astype(prompt.dtype)], axis=1)
 

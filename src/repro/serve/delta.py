@@ -17,6 +17,30 @@ server's words, which is bit-identical to a fresh load of round t+1
 is a pure function of (words, step) and the patched words ARE round
 t+1's words.  No re-encode, no drift, no restart.
 
+Cache survival — the changed-word → touched-tile map.  A hot-block
+cache (``serve.cache``) holds materialized weight tiles keyed by
+canonical contraction block; each block reads z coordinates of
+exactly ONE window, and its weight values depend on the score words
+ONLY through the drawn mask bits (w_row = Σ_k val_k · bit_k with
+static val_k).  So the exact invalidation set of a delta is: tiles
+whose window contains a coordinate where the DRAWN BIT flips —
+``(word changed) AND (Bern(decode(old)) != Bern(decode(new)))`` under
+the pinned draw word.  That is far smaller than "window contains a
+changed word": a word move that does not cross its coordinate's draw
+threshold changes nothing the cache holds.  ``delta_flipped_windows``
+computes the per-window flip map (same integer-threshold /
+``bernoulli_u32`` draw expressions as the serve kernels, so the map
+is exact, not heuristic), ``apply_delta(..., cache=...)`` drops
+exactly those tiles — the cache SURVIVES the hot-swap, retaining
+~(1-λ)^window of its tiles at per-coordinate flip rate λ (the
+``serve_batch`` bench gates >= 90% on a 1%-moved converged round).
+If the delta also changes the draw word (``delta.step != state.step``)
+every drawn bit re-rolls and the whole cache drops — serving
+deployments pin ONE draw word per deployment for exactly this reason.
+Invalidation is pinned bitwise against a fresh rebuild: a retained
+tile's pool row equals the tile a cold cache fills from round t+1's
+words (tests/test_serve_batch.py).
+
 Byte accounting is exact (``comm.metering.delta_wire_bytes``): the
 broadcaster ships the cheaper of a presence bitmap or a coordinate
 list, plus the 4-byte draw word.  The same XOR trick meters packed
@@ -30,9 +54,12 @@ from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..comm.downlink import get_codec
 from ..comm.metering import delta_wire_bytes, score_downlink_bytes
+from ..core.hashrng import bernoulli_u32
+from ..core.sampling import mask_u32, quant_threshold_u24
 from .state import ServeState
 
 
@@ -91,19 +118,75 @@ def make_delta(old: ServeState, new: ServeState) -> ServeDelta:
     )
 
 
-def apply_delta(sstate: ServeState, delta: ServeDelta) -> ServeState:
+def _drawn_bits(spec, words, step, qbits):
+    """The (n,) drawn mask bits of one leaf under the pinned draw word
+    — the exact draw expressions of ``kernels.ops._serve_edge_weights``
+    evaluated per z coordinate."""
+    coords = jnp.arange(spec.n, dtype=jnp.uint32)
+    u = mask_u32(spec.seed, spec.tensor_id, jnp.asarray(step, jnp.uint32),
+                 coords)
+    if qbits is None:
+        p = jnp.clip(jnp.asarray(words).astype(jnp.float32), 0.0, 1.0)
+        return bernoulli_u32(u, p).astype(bool)
+    thr = quant_threshold_u24(jnp.asarray(words).astype(jnp.uint32), qbits)
+    return (u >> np.uint32(8)) < thr
+
+
+def delta_flipped_windows(sstate: ServeState,
+                          delta: ServeDelta) -> Dict[str, Any]:
+    """{path: (num_windows,) bool} — windows where a drawn bit flips.
+
+    The EXACT invalidation map of ``delta`` for any tile cache keyed
+    by window (serve.cache): a cached tile is stale iff its window is
+    flagged here.  Requires the pinned draw word (``delta.step ==
+    sstate.step``) — with a changed draw word every bit re-rolls and
+    the caller must drop everything instead.
+    """
+    if int(jnp.asarray(delta.step)) != int(jnp.asarray(sstate.step)):
+        raise ValueError(
+            "delta changes the draw word; the flip map is the full set "
+            "— invalidate the whole cache"
+        )
+    qbits = sstate.qbits
+    out = {}
+    for path, patch in delta.words.items():
+        spec = sstate.zspecs.specs[path]
+        old_w = sstate.words[path]
+        new_w = apply_word_delta(old_w, patch)
+        flipped = (_drawn_bits(spec, old_w, sstate.step, qbits)
+                   != _drawn_bits(spec, new_w, sstate.step, qbits))
+        out[path] = flipped.reshape(spec.num_windows, spec.window).any(1)
+    return out
+
+
+def apply_delta(sstate: ServeState, delta: ServeDelta,
+                cache=None) -> ServeState:
     """Hot-swap: patch a live server's words to the next round.
 
     Returns a ServeState bit-identical to ``make_serve_state`` on round
     t+1's broadcast; feed ``engine.arrays_of`` on the result to the
     already-compiled decode step (arrays are jit arguments, so no
     recompile).
+
+    ``cache``: a live ``serve.cache.HotBlockCache`` to carry across
+    the swap — exactly the tiles whose drawn bits flip are dropped
+    (``delta_flipped_windows``; everything, if the draw word changed).
+    Retained tiles are bit-identical to a fresh round-t+1 fill, so the
+    cache needs no rebuild; call ``cache.fill(new_state)`` afterwards
+    to re-materialize the freed slots from the NEW words at leisure.
     """
     if delta.codec != sstate.codec:
         raise ValueError(
             f"delta is for codec {delta.codec!r}, state carries "
             f"{sstate.codec!r}"
         )
+    if cache is not None:
+        if int(jnp.asarray(delta.step)) != int(jnp.asarray(sstate.step)):
+            cache.invalidate_all()
+        else:
+            for path, flipped in delta_flipped_windows(sstate,
+                                                       delta).items():
+                cache.invalidate_windows(path, np.asarray(flipped))
     words = {p: apply_word_delta(sstate.words[p], delta.words[p])
              for p in sstate.words}
     return sstate.replace_arrays(
@@ -125,32 +208,47 @@ def delta_report(old: ServeState, new: ServeState) -> Dict[str, Any]:
     ``delta_bytes`` is what ``make_delta`` costs on the wire (cheaper
     of bitmap / coordinate-list per leaf, + 4 bytes draw word);
     ``full_bytes`` is the codec's full score broadcast for the same
-    leaf set.  Word-change counts are computed host-side, so call this
-    outside jit.
+    leaf set.  ``words_flipped`` counts changed words whose DRAWN BIT
+    also flips — the part of the delta a tile cache actually feels
+    (see module docstring).  Word-change counts are computed
+    host-side, so call this outside jit.
     """
     delta = make_delta(old, new)
     codec = get_codec(new.codec)
+    qbits = old.qbits
     wb = codec.bits // 8
+    same_step = int(jnp.asarray(delta.step)) == int(jnp.asarray(old.step))
     per_path = {}
     delta_bytes = 4  # the draw word rides along
     full_bytes = 0
     changed_total = 0
+    flipped_total = 0
     total = 0
     for path, patch in delta.words.items():
         n = int(patch.size)
         changed = int(jnp.count_nonzero(patch))
+        if same_step:
+            spec = old.zspecs.specs[path]
+            flips = int(jnp.count_nonzero(
+                _drawn_bits(spec, old.words[path], old.step, qbits)
+                != _drawn_bits(spec, new.words[path], old.step, qbits)))
+        else:
+            flips = n
         d = delta_wire_bytes(n, changed, wb)
         f = score_downlink_bytes(codec, n)
         per_path[path] = {"words": n, "changed": changed,
-                          "delta_bytes": d, "full_bytes": f}
+                          "flipped": flips, "delta_bytes": d,
+                          "full_bytes": f}
         delta_bytes += d
         full_bytes += f
         changed_total += changed
+        flipped_total += flips
         total += n
     return {
         "codec": new.codec,
         "words_total": total,
         "words_changed": changed_total,
+        "words_flipped": flipped_total,
         "delta_bytes": delta_bytes,
         "full_bytes": full_bytes,
         "delta_vs_full": delta_bytes / full_bytes if full_bytes else 0.0,

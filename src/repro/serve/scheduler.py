@@ -1,0 +1,204 @@
+"""Continuous batching: a request scheduler over the serve engine step.
+
+``make_generator`` drives one batch of equal-length prompts in
+lockstep — fine for benches, wrong for a serving node where requests
+arrive ragged and finish ragged.  ``ServeScheduler`` runs the engine's
+batched step as a fixed set of LANES instead:
+
+ - every engine step advances all lanes one token, live-masked;
+ - a lane is ADMITTED by popping the request queue and resetting that
+   lane's position to 0 — no KV reallocation, no recompile (positions
+   are a (B,) jit argument, and the previous occupant's stale KV sits
+   beyond the validity mask contributing exact zeros);
+ - a lane PREFILLS in place, decode-style: prompt tokens feed one per
+   step (the cache-honest prefill of serve.decode), and the step that
+   consumes the last prompt token yields the first sampled token;
+ - a lane RETIRES the moment its request hits ``max_new_tokens`` (or
+   the optional eos), freeing the slot for the next admission at the
+   very next step.
+
+Per-lane bits equal the single-request path at the same KV capacity
+(``decode_attend_lanes``; pinned in tests/test_serve_batch.py), so
+batching is a pure throughput knob: B lanes amortize the per-step
+weight sourcing — the streamed regeneration or the hot-block cache
+gather runs ONCE per step whatever B is — without touching outputs.
+
+Sampling is greedy (host argmax over the step's logits — one device
+sync per step, which also paces the async dispatch queue).  Round
+updates hot-swap mid-flight: ``apply_round_delta`` patches the words,
+drops exactly the flipped-bit tiles from the hot-block cache, refills
+the freed slots from the new words, and swaps the arrays under the
+same compiled step — in-flight requests keep the KV they built under
+round t and continue under t+1, deterministically (the PR-8 semantics,
+now per lane).
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from .cache import HotBlockCache, ServeConfig, build_cache
+from .decode import ServeEngine, build_serve_engine
+from .delta import ServeDelta, apply_delta
+from .state import ServeState
+
+
+@dataclass
+class Request:
+    """One queued/in-flight generation request."""
+
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    eos: Optional[int] = None
+    tokens: List[int] = field(default_factory=list)
+    fed: int = 0  # engine steps this request has taken
+
+
+class ServeScheduler:
+    """Fixed-lane continuous-batching driver for one serving node.
+
+    Owns the compiled step, the lane KV cache, the current
+    ``ServeState`` arrays, and (in cached mode) the hot-block cache.
+    Host-side control plane: admission, per-lane token assembly,
+    greedy sampling, retirement — everything device-side is the one
+    jitted engine step at fixed (lanes, 1) shapes.
+    """
+
+    def __init__(self, model: Model, sstate: ServeState,
+                 config: ServeConfig, *,
+                 cache: Optional[HotBlockCache] = None,
+                 engine: Optional[ServeEngine] = None):
+        self.config = config
+        self.sstate = sstate
+        self.engine = engine or build_serve_engine(
+            model, sstate, mode=config.mode, impl=config.impl)
+        self.cache = cache
+        if self.engine.mode == "cached" and self.cache is None:
+            self.cache = build_cache(sstate, config)
+        self.arrays = self.engine.arrays_of(sstate, cache=self.cache)
+        self.kv = self.engine.init_lane_cache(config.lanes, config.seq_len)
+        self._step = jax.jit(self.engine.step)
+        self._lane: List[Optional[Request]] = [None] * config.lanes
+        self._queue: deque = deque()
+        self._next_rid = 0
+        self.results: Dict[int, np.ndarray] = {}
+        self.steps = 0
+
+    # --- request lifecycle ----------------------------------------------
+    def submit(self, prompt, max_new_tokens: Optional[int] = None,
+               eos: Optional[int] = None) -> int:
+        """Queue a request; returns its id (key into ``results``)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        new = max_new_tokens or self.config.max_new_tokens
+        if prompt.size + new > self.config.seq_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({new}) "
+                f"exceeds lane seq_len {self.config.seq_len}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, prompt=prompt,
+                                   max_new_tokens=new, eos=eos))
+        return rid
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self._lane)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue) + self.active
+
+    def _admit(self) -> None:
+        for l in range(self.config.lanes):
+            if self._lane[l] is None and self._queue:
+                self._lane[l] = self._queue.popleft()
+                # lane recycling IS position reset — stale KV beyond
+                # the validity mask never reaches the softmax
+                self.kv = self.kv._replace(
+                    pos=self.kv.pos.at[l].set(0))
+
+    def _retire(self, l: int) -> None:
+        req = self._lane[l]
+        self.results[req.rid] = np.asarray(req.tokens, np.int32)
+        self._lane[l] = None
+
+    # --- the step -------------------------------------------------------
+    def step_once(self) -> None:
+        """Admit, advance every live lane one token, sample, retire."""
+        self._admit()
+        B = self.config.lanes
+        tok = np.zeros((B, 1), np.int32)
+        live = np.zeros((B,), bool)
+        for l, req in enumerate(self._lane):
+            if req is None:
+                continue
+            live[l] = True
+            tok[l, 0] = (req.prompt[req.fed] if req.fed < req.prompt.size
+                         else req.tokens[-1])
+        logits, self.kv = self._step(self.arrays, self.kv,
+                                     jnp.asarray(tok), jnp.asarray(live))
+        self.steps += 1
+        if self.cache is not None:
+            self.cache.record_step()
+        row = np.asarray(logits[:, 0])  # the per-step device sync
+        for l, req in enumerate(self._lane):
+            if req is None:
+                continue
+            req.fed += 1
+            if req.fed >= req.prompt.size:
+                nxt = int(np.argmax(row[l]))
+                req.tokens.append(nxt)
+                if (len(req.tokens) >= req.max_new_tokens
+                        or nxt == req.eos):
+                    self._retire(l)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue: step until every request retired.  Returns
+        {rid: (new_tokens,) int32} for everything completed so far."""
+        while self.pending:
+            self.step_once()
+        return self.results
+
+    # --- round updates --------------------------------------------------
+    def swap_state(self, sstate: ServeState) -> None:
+        """Replace the serving state wholesale (full re-broadcast).
+        Drops the whole hot-block cache; in-flight lanes keep their KV
+        and continue under the new words."""
+        if self.cache is not None:
+            self.cache.invalidate_all()
+            self.cache.fill(sstate)
+        self.sstate = sstate
+        self.arrays = self.engine.arrays_of(sstate, cache=self.cache)
+
+    def apply_round_delta(self, delta: ServeDelta) -> ServeState:
+        """Hot-swap mid-flight: patch words, invalidate exactly the
+        flipped-bit tiles, refill the freed slots from the new words,
+        swap arrays under the same compiled step."""
+        new_state = apply_delta(self.sstate, delta, cache=self.cache)
+        if self.cache is not None:
+            self.cache.fill(new_state)
+        self.sstate = new_state
+        self.arrays = self.engine.arrays_of(new_state, cache=self.cache)
+        return new_state
+
+    # --- metrics --------------------------------------------------------
+    def metrics(self) -> Dict[str, Any]:
+        out = {
+            "steps": self.steps,
+            "lanes": self.config.lanes,
+            "active": self.active,
+            "queued": len(self._queue),
+            "completed": len(self.results),
+        }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out

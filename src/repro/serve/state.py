@@ -79,7 +79,8 @@ class ServeState:
 
 def make_serve_state(zspecs: ZamplingSpecs, state, key, *,
                      downlink: Optional[str] = None,
-                     dither_word=0) -> ServeState:
+                     dither_word=0,
+                     carried: Optional[str] = None) -> ServeState:
     """Build a ServeState from a training-side ``state`` dict.
 
     ``state``: {"scores": {path: scores-or-wire-words}, "dense": ...}.
@@ -90,8 +91,31 @@ def make_serve_state(zspecs: ZamplingSpecs, state, key, *,
     keying the dither stream — servers that broadcast deltas MUST
     reuse one dither word across rounds (see serve.delta) so unchanged
     scores keep unchanged words.
+
+    ``carried``: the codec the score leaves ALREADY carry — pass the
+    checkpoint's tag (``checkpoint.checkpoint_downlink``) when serving
+    from a saved carry, instead of letting ``infer_downlink`` sniff
+    dtypes (a uint8 leaf is ambiguous: wire words and token ids look
+    alike).  Validated against the leaves' wire width; default falls
+    back to sniffing for in-process states, whose provenance is known.
     """
-    carried = infer_downlink(state["scores"])
+    if carried is not None:
+        codec = get_codec(carried)
+        for path, leaf in state["scores"].items():
+            dt = jnp.asarray(leaf).dtype
+            if codec.quantized:
+                ok = (jnp.issubdtype(dt, jnp.unsignedinteger)
+                      and dt.itemsize * 8 == codec.bits)
+            else:
+                ok = jnp.issubdtype(dt, jnp.floating)
+            if not ok:
+                raise ValueError(
+                    f"score leaf {path!r} has dtype {dt}, which cannot "
+                    f"carry the tagged codec {codec.name!r}"
+                )
+        carried = codec.name
+    else:
+        carried = infer_downlink(state["scores"])
     target = downlink or carried
     if carried == target:
         words = dict(state["scores"])

@@ -1,0 +1,545 @@
+"""Hot-block cache + continuous batching: the PR-9 serving surface.
+
+The load-bearing claims, each pinned bitwise (no tolerances):
+
+ - ``serve_cached_matmul`` equals ``serve_matmul`` at EVERY cache
+   occupancy (empty, partial, full, garbage-poisoned free pool rows)
+   for all three downlink codecs — a hit only changes WHERE a block's
+   values come from;
+ - ``serve_fill_tiles`` writes exactly the values the streaming miss
+   branch regenerates (cross-checked against the reconstructed leaf);
+ - the batched lane path equals the single-request PR-8 path at
+   matched KV capacity, per lane, including lane recycling and a
+   round delta landing MID-GENERATION on a live scheduler;
+ - a delta invalidates exactly the flipped-drawn-bit tiles: every
+   retained pool row is bit-identical to a fresh round-t+1 rebuild,
+   and a 1%-moved converged round retains >= 90% of the cache.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    DOWNLINK_KEY,
+    checkpoint_downlink,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.comm.downlink import get_codec
+from repro.comm.metering import serve_resident_bytes, serve_tile_pool_bytes
+from repro.core import ZamplingConfig, build_specs, init_state
+from repro.core.qspec import make_qspec
+from repro.core.sampling import as_word
+from repro.kernels import ops
+from repro.serve import (
+    HotBlockCache,
+    ServeConfig,
+    ServeScheduler,
+    apply_delta,
+    build_cache,
+    build_serve_engine,
+    delta_flipped_windows,
+    make_delta,
+    make_serve_state,
+    serve_generate,
+)
+
+CODECS = ("f32", "u16", "u8")
+
+
+def _scores(n, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).rand(n).astype(np.float32))
+
+
+def _words(codec_name, spec, scores):
+    """(operand, qbits) the serve ops take for this codec."""
+    c = get_codec(codec_name)
+    if c.quantized:
+        return c.encode(spec, scores, as_word(3)), c.bits
+    return scores, None
+
+
+def _full_slots(spec, bm=ops.SERVE_BM):
+    """Slot maps covering every canonical block: {g: (nblk,) i32}
+    plus the total tile count, slots assigned in canonical order."""
+    groups, d_in, d_out = ops.serve_group_dims(spec)
+    sub = d_in * d_out
+    slot_rows, k = [], 0
+    for g in range(groups):
+        _, nblk, _ = ops.serve_block_grid(spec, bm, g * sub, sub)
+        slot_rows.append(np.arange(k, k + nblk, dtype=np.int32))
+        k += nblk
+    return slot_rows, k
+
+
+class TestCachedKernels:
+    """ops-level: the cached contraction against the streaming oracle."""
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_cached_matmul_every_occupancy(self, codec):
+        spec = make_qspec(11, (24, 40), 24, compression=4.0, d=4, window=64)
+        scores = _scores(spec.n, seed=3)
+        words, qbits = _words(codec, spec, scores)
+        step = as_word(2)
+        groups, d_in, _ = ops.serve_group_dims(spec)
+        X = jnp.asarray(
+            np.random.RandomState(1).randn(3, d_in).astype(np.float32))
+        slot_rows, total = _full_slots(spec)
+        for g in range(groups):
+            gs = jnp.full((len(slot_rows[g]),), g, jnp.int32)
+            ts = jnp.arange(len(slot_rows[g]), dtype=jnp.int32)
+            tiles = ops.serve_fill_tiles(spec, words, step, gs, ts,
+                                         qbits=qbits)
+            ref = ops.serve_matmul(spec, words, step, X, group=g,
+                                   qbits=qbits)
+            # empty: all-miss, pool rows are GARBAGE and must not leak
+            poison = jnp.full((total, ops.SERVE_BM), jnp.nan, jnp.float32)
+            empty = jnp.full((len(slot_rows[g]),), -1, jnp.int32)
+            out = ops.serve_cached_matmul(spec, words, step, X, poison,
+                                          empty, group=g, qbits=qbits)
+            assert (np.asarray(out) == np.asarray(ref)).all(), (codec, g)
+            # full: all-hit from the filled pool
+            pool = poison.at[jnp.asarray(slot_rows[g])].set(tiles)
+            full = jnp.asarray(slot_rows[g])
+            out = ops.serve_cached_matmul(spec, words, step, X, pool,
+                                          full, group=g, qbits=qbits)
+            assert (np.asarray(out) == np.asarray(ref)).all(), (codec, g)
+            # partial: every other block hits, the rest stream
+            half = np.asarray(slot_rows[g]).copy()
+            half[::2] = -1
+            out = ops.serve_cached_matmul(spec, words, step, X, pool,
+                                          jnp.asarray(half), group=g,
+                                          qbits=qbits)
+            assert (np.asarray(out) == np.asarray(ref)).all(), (codec, g)
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_fill_tiles_match_reconstructed_leaf(self, codec):
+        """Pool rows scattered back along the canonical grid reproduce
+        the reconstructed leaf exactly (dead lanes exact +0.0)."""
+        spec = make_qspec(12, (40, 24), 40, compression=4.0, d=4, window=64)
+        scores = _scores(spec.n, seed=4)
+        words, qbits = _words(codec, spec, scores)
+        step = as_word(2)
+        W = np.asarray(ops.sample_reconstruct(
+            spec, words if qbits is not None else scores, step,
+            qbits=qbits)).reshape(-1)
+        groups, d_in, d_out = ops.serve_group_dims(spec)
+        sub = d_in * d_out
+        rpw = spec.rows_per_window
+        bm = ops.SERVE_BM
+        bpw = max(1, -(-rpw // bm))
+        for g in range(groups):
+            w0, nblk, _ = ops.serve_block_grid(spec, bm, g * sub, sub)
+            ts = np.arange(nblk)
+            tiles = np.asarray(ops.serve_fill_tiles(
+                spec, words, step,
+                jnp.full((nblk,), g, jnp.int32),
+                jnp.asarray(ts, jnp.int32), qbits=qbits))
+            for t in ts:
+                bstart = (w0 + t // bpw) * rpw + (t % bpw) * bm
+                rows = bstart + np.arange(bm)
+                live = ((rows >= g * sub) & (rows < (g + 1) * sub)
+                        & ((t % bpw) * bm + np.arange(bm) < rpw)
+                        & (rows < spec.m))
+                want = np.where(live, W[np.minimum(rows, spec.m - 1)], 0.0)
+                got = tiles[t]
+                assert (got == want.astype(np.float32)).all(), (codec, g, t)
+                assert not got[~live].any(), "dead lanes must be +0.0"
+
+    def test_cached_matmul_validates(self):
+        spec = make_qspec(11, (24, 40), 24, compression=4.0, d=4, window=64)
+        words, qbits = _words("u8", spec, _scores(spec.n))
+        pool = jnp.zeros((1, ops.SERVE_BM), jnp.float32)
+        _, nblk, _ = ops.serve_block_grid(spec, ops.SERVE_BM, 0, spec.m)
+        slots = jnp.full((nblk,), -1, jnp.int32)
+        with pytest.raises(ValueError):
+            ops.serve_cached_matmul(spec, words, as_word(2),
+                                    jnp.zeros((24,)), pool, slots,
+                                    qbits=qbits)
+        with pytest.raises(ValueError):
+            ops.serve_cached_matmul(spec, words, as_word(2),
+                                    jnp.zeros((1, 24)), pool, slots,
+                                    group=7, qbits=qbits)
+        with pytest.raises(ValueError):
+            ops.serve_fill_tiles(spec, words, as_word(2),
+                                 jnp.zeros((2,), jnp.int32),
+                                 jnp.zeros((3,), jnp.int32), qbits=qbits)
+
+
+@pytest.fixture(scope="module")
+def served():
+    from repro.configs.registry import get_arch
+    from repro.models import build_model
+
+    cfg = get_arch("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # window=128: fine-grained tiles so drawn-bit invalidation has
+    # headroom (the retention gate below) while staying CPU-fast
+    zspecs = build_specs(params, ZamplingConfig(compression=4, d=4,
+                                                window=128))
+    state = init_state(jax.random.PRNGKey(1), zspecs, dense_init=params)
+    return model, zspecs, state
+
+
+def _perturbed(state, frac=0.01, amp=0.02, seed=7):
+    """Round t+1: a converged-round score update touching ``frac``."""
+    key = jax.random.PRNGKey(seed)
+    scores2 = {}
+    for p, s in state["scores"].items():
+        k1, k2, key = jax.random.split(key, 3)
+        touch = jax.random.bernoulli(k1, frac, s.shape)
+        scores2[p] = jnp.where(touch,
+                               s + amp * jax.random.normal(k2, s.shape), s)
+    return {"scores": scores2, "dense": state["dense"]}
+
+
+class TestHotBlockCache:
+    def test_budget_dial_endpoints(self, served):
+        _, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        # budget 0: pure streaming — nothing resident, all misses
+        c0 = build_cache(ss, ServeConfig(cache_budget_bytes=0))
+        assert c0.capacity == 0 and c0.resident_tiles == 0
+        assert c0.fill(ss) == 0
+        c0.record_step(3)
+        assert c0.counters["hits"] == 0
+        assert c0.counters["misses"] == 3 * c0.total_tiles
+        # budget >= model: capacity caps at one row per canonical tile
+        cf = build_cache(ss, ServeConfig(cache_budget_bytes=1 << 30))
+        assert cf.capacity == cf.total_tiles
+        assert cf.resident_tiles == cf.total_tiles
+        assert cf.used_bytes == cf.capacity_bytes
+        cf.record_step()
+        assert cf.counters["hits"] == cf.total_tiles
+        assert cf.counters["misses"] == 0
+        # partial budget buys exactly budget // tile_bytes rows
+        budget = 17 * cf.tile_bytes + 5
+        cp = build_cache(ss, ServeConfig(cache_budget_bytes=budget))
+        assert cp.capacity == 17 and cp.resident_tiles == 17
+
+    def test_pool_bytes_meter_matches_cache(self, served):
+        _, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        for budget in (0, 12345, 1 << 20, 1 << 30):
+            cache = HotBlockCache(ss, budget)
+            assert (serve_tile_pool_bytes(zspecs, budget)
+                    == cache.capacity_bytes), budget
+
+    def test_clock_eviction_second_chance(self, served):
+        _, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        cache = HotBlockCache(ss, 8 * 4 * ops.SERVE_BM)
+        assert cache.fill(ss) == 8
+        # default fill never evicts: the pool is full, nothing happens
+        assert cache.fill(ss) == 0
+        assert cache.counters["evictions"] == 0
+        # evict=True admits new tiles through the clock (ref bits are
+        # set from the fill, so the hand sweeps once to clear them)
+        n = cache.fill(ss, limit=3, evict=True)
+        assert n == 3
+        assert cache.counters["evictions"] == 3
+        assert cache.resident_tiles == 8  # still at capacity
+
+    def test_serve_config_validates(self):
+        with pytest.raises(ValueError):
+            ServeConfig(lanes=0)
+        with pytest.raises(ValueError):
+            ServeConfig(cache_budget_bytes=-1)
+        with pytest.raises(ValueError):
+            ServeConfig(mode="turbo")
+        with pytest.raises(ValueError):
+            ServeConfig(max_new_tokens=0)
+
+
+class TestCachedEngine:
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_three_modes_bit_identical_across_budgets(self, served, codec):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink=codec)
+        prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+        o_s = serve_generate(model, ss, prompt, 3, mode="streaming",
+                             seq_len=16)
+        o_l = serve_generate(model, ss, prompt, 3, mode="load", seq_len=16)
+        assert (np.asarray(o_s) == np.asarray(o_l)).all()
+        full = HotBlockCache(ss, 1 << 30)
+        part = HotBlockCache(ss, full.capacity_bytes // 3)
+        for cache in (HotBlockCache(ss, 0), part, full):
+            cache.fill(ss)
+            o_c = serve_generate(model, ss, prompt, 3, mode="cached",
+                                 seq_len=16, cache=cache)
+            assert (np.asarray(o_c) == np.asarray(o_s)).all(), (
+                codec, cache.resident_tiles)
+
+    def test_cached_engine_requires_cache(self, served):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        engine = build_serve_engine(model, ss, mode="cached")
+        with pytest.raises(ValueError):
+            engine.arrays_of(ss)
+
+
+class TestScheduler:
+    RAGGED = ([5, 17, 42, 7], [1, 2, 3], [9, 9, 1, 0, 3], [4, 4])
+
+    def _single(self, model, ss, prompt, new, seq_len, mode="streaming",
+                cache=None):
+        out = serve_generate(model, ss, jnp.asarray([prompt], jnp.int32),
+                             new, mode=mode, seq_len=seq_len, cache=cache)
+        return np.asarray(out)[0, len(prompt):]
+
+    @pytest.mark.parametrize("mode", ["streaming", "cached"])
+    def test_batched_equals_single_request(self, served, mode):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        new = 4
+        seq_len = max(len(p) for p in self.RAGGED) + new
+        cfg = ServeConfig(lanes=4, seq_len=seq_len, mode=mode,
+                          cache_budget_bytes=1 << 30, max_new_tokens=new)
+        sched = ServeScheduler(model, ss, cfg)
+        rids = {sched.submit(p): p for p in self.RAGGED}
+        results = sched.run()
+        for rid, p in rids.items():
+            # bit-equality holds at MATCHED KV capacity: softmax reduces
+            # over seq_len slots, so the lane and the single request
+            # must share it
+            want = self._single(model, ss, p, new, seq_len, mode=mode,
+                                cache=sched.cache)
+            assert (results[rid] == want).all(), p
+
+    def test_lane_recycling_bitwise(self, served):
+        """More requests than lanes: retired lanes re-admit from the
+        queue; recycled-lane outputs still equal single-request."""
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        prompts = list(self.RAGGED) + [[8, 3, 1], [2, 7]]
+        new, seq_len = 3, 8
+        cfg = ServeConfig(lanes=2, seq_len=seq_len, mode="streaming",
+                          max_new_tokens=new)
+        sched = ServeScheduler(model, ss, cfg)
+        rids = {sched.submit(p): p for p in prompts}
+        results = sched.run()
+        assert len(results) == len(prompts)
+        for rid, p in rids.items():
+            want = self._single(model, ss, p, new, seq_len)
+            assert (results[rid] == want).all(), p
+
+    @pytest.mark.parametrize("mode", ["streaming", "cached"])
+    def test_hot_swap_mid_generation_per_lane(self, served, mode):
+        """Satellite (c): a round delta lands mid-flight on a batched
+        scheduler; every lane matches the single-request PR-8 swap at
+        the same per-request step boundary, twice (determinism)."""
+        model, zspecs, state = served
+        ss1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                               downlink="u8", dither_word=0)
+        ss2 = make_serve_state(zspecs, _perturbed(state),
+                               jax.random.PRNGKey(2),
+                               downlink="u8", dither_word=0)
+        delta = make_delta(ss1, ss2)
+        new = 4
+        seq_len = max(len(p) for p in self.RAGGED) + new
+        swap_at = 3  # engine steps under round t before the broadcast
+
+        def batched():
+            cfg = ServeConfig(lanes=4, seq_len=seq_len, mode=mode,
+                              cache_budget_bytes=1 << 30,
+                              max_new_tokens=new)
+            sched = ServeScheduler(model, ss1, cfg)
+            rids = {sched.submit(p): p for p in self.RAGGED}
+            for _ in range(swap_at):
+                sched.step_once()
+            sched.apply_round_delta(delta)
+            return {tuple(rids[r]): v for r, v in sched.run().items()}
+
+        def single(prompt):
+            # the PR-8 scalar path, swapping arrays after swap_at steps
+            engine = build_serve_engine(model, ss1, mode="streaming")
+            step = jax.jit(engine.step)
+            arrays = [engine.arrays_of(ss1),
+                      engine.arrays_of(apply_delta(ss1, delta))]
+            kv = engine.init_cache(1, seq_len)
+            toks, logits, n = [], None, 0
+            while len(toks) < new:
+                if n < len(prompt):
+                    tok = jnp.asarray([[prompt[n]]], jnp.int32)
+                else:
+                    tok = jnp.asarray([[toks[-1]]], jnp.int32)
+                logits, kv = step(arrays[n >= swap_at], kv, tok)
+                n += 1
+                if n >= len(prompt):
+                    toks.append(int(np.argmax(np.asarray(logits)[0, 0])))
+            return np.asarray(toks, np.int32)
+
+        got = batched()
+        again = batched()
+        for p in self.RAGGED:
+            want = single(list(p))
+            assert (got[tuple(p)] == want).all(), p
+            assert (again[tuple(p)] == got[tuple(p)]).all(), p
+
+    def test_submit_overflow_rejected(self, served):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        sched = ServeScheduler(model, ss, ServeConfig(
+            lanes=1, seq_len=6, mode="streaming", max_new_tokens=4))
+        with pytest.raises(ValueError):
+            sched.submit([1, 2, 3])  # 3 + 4 > 6
+
+
+class TestDeltaInvalidation:
+    def test_flip_map_requires_pinned_draw(self, served):
+        _, zspecs, state = served
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        s2 = make_serve_state(zspecs, _perturbed(state),
+                              jax.random.PRNGKey(3),
+                              downlink="u8", dither_word=0)
+        delta = make_delta(s1, s2)
+        with pytest.raises(ValueError):
+            delta_flipped_windows(s1, delta)
+        # apply_delta with a changed draw word drops the whole cache
+        cache = build_cache(s1, ServeConfig(cache_budget_bytes=1 << 30))
+        assert cache.resident_tiles == cache.total_tiles
+        apply_delta(s1, delta, cache=cache)
+        assert cache.resident_tiles == 0
+
+    @pytest.mark.parametrize("codec", CODECS)
+    def test_retained_tiles_equal_fresh_rebuild(self, served, codec):
+        """The invalidation-exactness pin: after the swap, every tile
+        still resident is bit-identical to filling it fresh from the
+        NEW words — the cache needs no rebuild."""
+        _, zspecs, state = served
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        s2 = make_serve_state(zspecs, _perturbed(state),
+                              jax.random.PRNGKey(2),
+                              downlink=codec, dither_word=0)
+        cache = build_cache(s1, ServeConfig(cache_budget_bytes=1 << 30))
+        new_state = apply_delta(s1, make_delta(s1, s2), cache=cache)
+        assert 0 < cache.resident_tiles < cache.total_tiles
+        pool = np.asarray(cache.arrays()["pool"])
+        for path, slots in cache.slots.items():
+            grid = cache.grids[path]
+            g_idx, t_idx = np.nonzero(slots >= 0)
+            if not g_idx.size:
+                continue
+            fresh = np.asarray(ops.serve_fill_tiles(
+                grid.spec, new_state.words[path], new_state.step,
+                jnp.asarray(g_idx, jnp.int32),
+                jnp.asarray(t_idx, jnp.int32), qbits=cache.qbits))
+            got = pool[slots[g_idx, t_idx]]
+            assert (got == fresh).all(), (codec, path)
+
+    def test_post_swap_cached_equals_streaming(self, served):
+        model, zspecs, state = served
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        s2 = make_serve_state(zspecs, _perturbed(state),
+                              jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        cache = build_cache(s1, ServeConfig(cache_budget_bytes=1 << 30))
+        swapped = apply_delta(s1, make_delta(s1, s2), cache=cache)
+        cache.fill(swapped)  # re-materialize the freed slots
+        assert cache.resident_tiles == cache.total_tiles
+        prompt = jnp.asarray([[1, 2, 3]], jnp.int32)
+        o_c = serve_generate(model, swapped, prompt, 3, mode="cached",
+                             seq_len=8, cache=cache)
+        o_s = serve_generate(model, swapped, prompt, 3, mode="streaming",
+                             seq_len=8)
+        assert (np.asarray(o_c) == np.asarray(o_s)).all()
+
+    def test_converged_round_retention(self, served):
+        """The CI gate's claim at test scale: a 1%-moved round under the
+        drawn-bit flip map retains >= 90% of the hot-block cache."""
+        _, zspecs, state = served
+        s1 = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        s2 = make_serve_state(zspecs, _perturbed(state),
+                              jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        cache = build_cache(s1, ServeConfig(cache_budget_bytes=1 << 30))
+        total = cache.resident_tiles
+        apply_delta(s1, make_delta(s1, s2), cache=cache)
+        retained = cache.resident_tiles / total
+        assert retained >= 0.9, f"retention {retained:.3f} < 0.9"
+
+
+class TestCodecTagCheckpoint:
+    def test_tag_roundtrip_and_routing(self, served, tmp_path):
+        _, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8", dither_word=0)
+        carry = {"scores": dict(ss.words), "dense": dict(ss.dense)}
+        path = os.path.join(tmp_path, "round.npz")
+        save_checkpoint(path, carry, {"round": 7}, downlink="u8")
+        loaded, meta = load_checkpoint(path, carry)
+        tag = checkpoint_downlink(meta)
+        assert tag == "u8" and meta[DOWNLINK_KEY] == "u8"
+        back = make_serve_state(zspecs, loaded, jax.random.PRNGKey(2),
+                                carried=tag)
+        assert back.codec == "u8"
+        for p in ss.words:
+            assert (np.asarray(back.words[p])
+                    == np.asarray(ss.words[p])).all(), p
+
+    def test_tag_validation(self, served, tmp_path):
+        _, zspecs, state = served
+        path = os.path.join(tmp_path, "bad.npz")
+        with pytest.raises(ValueError):
+            save_checkpoint(path, state, downlink="zstd-9000")
+        with pytest.raises(ValueError):
+            save_checkpoint(path, state, {DOWNLINK_KEY: "u16"},
+                            downlink="u8")
+        save_checkpoint(path, state, {DOWNLINK_KEY: "f32"})
+        _, meta = load_checkpoint(path, state)
+        assert checkpoint_downlink(meta) == "f32"
+        assert checkpoint_downlink({}) is None
+        with pytest.raises(ValueError):
+            checkpoint_downlink({DOWNLINK_KEY: "nope"})
+        # the tag refuses leaves that cannot carry it: f32 scores are
+        # not u8 wire words, dtype sniffing be damned
+        with pytest.raises(ValueError):
+            make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                             carried="u8")
+
+
+class TestResidentAccounting:
+    def test_serve_resident_bytes_modes(self, served):
+        model, zspecs, state = served
+        ss = make_serve_state(zspecs, state, jax.random.PRNGKey(2),
+                              downlink="u8")
+        budget = 1 << 20
+        kv = build_serve_engine(model, ss,
+                                mode="streaming").init_cache(1, 16)
+        kv_bytes = sum(int(jnp.asarray(x).nbytes)
+                       for x in jax.tree_util.tree_leaves(kv))
+        r_s = serve_resident_bytes(ss, mode="streaming", kv_cache=kv)
+        r_l = serve_resident_bytes(ss, mode="load")
+        r_c = serve_resident_bytes(ss, budget, mode="cached")
+        assert r_s["zampled_bytes"] == ss.resident_zampled_bytes()
+        assert r_s["kv_bytes"] == kv_bytes
+        assert r_l["zampled_bytes"] == ss.loaded_zampled_bytes()
+        assert r_l["cache_bytes"] == 0 and r_l["kv_bytes"] == 0
+        assert r_c["cache_bytes"] == serve_tile_pool_bytes(zspecs, budget)
+        for r in (r_s, r_l, r_c):
+            assert r["total_bytes"] == (r["zampled_bytes"]
+                                        + r["cache_bytes"] + r["kv_bytes"]
+                                        + r["dense_bytes"])
+        # the dial's endpoints: cached at full budget holds words+pool,
+        # strictly between streaming and load+words
+        r_f = serve_resident_bytes(ss, 1 << 30, mode="cached")
+        assert r_s["total_bytes"] < r_f["total_bytes"]
+        with pytest.raises(ValueError):
+            serve_resident_bytes(ss, mode="resident")
