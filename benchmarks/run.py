@@ -383,12 +383,19 @@ def bench_downlink(full=False):
             out = codec.encode(spec, p, jnp.uint32(3))
             np.testing.assert_array_equal(np.asarray(out), np.asarray(p))
             continue
-        q = jnp.asarray(
-            rng.randint(0, 1 << codec.bits, spec.n), codec.wire_dtype
-        )
+        q = jnp.asarray(rng.randint(0, 1 << codec.bits, spec.n), jnp.uint32)
+        if codec.packed:
+            # packed codecs carry uint32 LANES: decode from the lanes,
+            # draw from the per-coordinate words they unpack to
+            from repro.comm.bitpack import pack_words
+
+            wire = pack_words(q, codec.bits)
+        else:
+            wire = q.astype(codec.wire_dtype)
+            q = wire.astype(jnp.uint32)
         a = np.asarray(sample_mask_qhash(q, codec.bits, spec.seed,
                                          spec.tensor_id, jnp.uint32(9)))
-        b = np.asarray(sample_mask_hash(codec.decode(spec, q), spec.seed,
+        b = np.asarray(sample_mask_hash(codec.decode(spec, wire), spec.seed,
                                         spec.tensor_id, jnp.uint32(9)))
         np.testing.assert_array_equal(
             a, b, err_msg=f"{name} integer draw not bit-exact vs decoded f32"
@@ -431,6 +438,47 @@ def bench_downlink(full=False):
             })
             _emit(f"downlink_codec_{name}_K{K}", us,
                   f"down={down}B;vs_f32={down / f32_down:.4f}")
+
+    # adaptive rate schedules: a scanned R-round fit per schedule with
+    # the REALIZED metered bytes (scheduled width + lane padding), one
+    # compile each — ci.sh gates on these rows being present
+    from repro.train import federated_fit
+
+    K, R = 10, 4 if not full else 8
+    clients = iid_client_split(ds, K)
+    stream = client_batch_stream(clients, 64, 2, seed=0)
+    per_round = [next(stream) for _ in range(R)]
+    rb = {"x": jnp.asarray(np.stack([x for x, _ in per_round])),
+          "y": jnp.asarray(np.stack([y for _, y in per_round]))}
+    for sched, name in (("constant", "u8"), ("cosine", "packed4"),
+                        ("frontier", "u8"), ("frontier", "packed4")):
+        extra = {"downlink_schedule": sched, "schedule_b_min": 2}
+        if sched == "cosine":
+            extra["schedule_rounds"] = R
+        cfg = FederatedConfig(num_clients=K, local_steps=2, local_lr=0.5,
+                              aggregate="psum_u32", downlink=name, **extra)
+        st = encode_state(zspecs, cfg, state0)
+        f = jax.jit(lambda s, b, k, cfg=cfg: federated_fit(
+            zspecs, s, mlp_loss, b, k, cfg))
+        st1, met = f(st, rb, jax.random.PRNGKey(0))
+        jax.block_until_ready(st1)
+        assert np.isfinite(np.asarray(met["loss"])).all(), (sched, name)
+        iters = 5 if full else 2
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(f(st, rb, jax.random.PRNGKey(0)))
+        us = (time.perf_counter() - t0) / iters / R * 1e6
+        down = np.asarray(met["downlink_bytes_per_client"], np.float64)
+        rows.append({
+            "bench": "downlink_schedule", "codec": name,
+            "strategy": f"{sched}_{name}", "K": K, "n": n,
+            "rounds": R, "us": us,
+            "downlink_bytes_per_client": float(down[-1]),
+            "downlink_bytes_cumulative": float(down.sum()),
+            "downlink_vs_f32": float(down[-1]) / f32_down,
+        })
+        _emit(f"downlink_schedule_{sched}_{name}", us,
+              f"cum={down.sum():.0f}B;last={down[-1]:.0f}B")
     return rows
 
 

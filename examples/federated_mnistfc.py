@@ -59,7 +59,17 @@ ap.add_argument("--compression", type=float, default=8.0)
 ap.add_argument("--aggregate", default="psum_u32",
                 help="wire transport: mean_f32 | psum_u32 | allgather_packed")
 ap.add_argument("--downlink", default="u8",
-                help="server broadcast codec: f32 | u16 | u8")
+                help="server broadcast codec: f32 | u16 | u8 | "
+                     "packed4 | packed2 (sub-byte words in uint32 lanes)")
+ap.add_argument("--downlink-schedule", default="constant",
+                help="downlink rate schedule: constant | cosine (anneal "
+                     "width up over --rounds) | frontier (per-tensor "
+                     "width from the measured draw-word flip fraction); "
+                     "the realized per-round bytes are metered in the "
+                     "'down' column")
+ap.add_argument("--schedule-b-min", type=int, default=2,
+                help="minimum scheduled width in bits (cosine start / "
+                     "frontier floor)")
 ap.add_argument("--block", type=int, default=5,
                 help="rounds per compiled scan block (and eval period)")
 ap.add_argument("--population", type=int, default=0,
@@ -140,11 +150,17 @@ else:
     plan = None
     clients = iid_client_split(ds, args.clients)
     stream = client_batch_stream(clients, 64, args.local_steps, seed=0)
+sched_kw = {}
+if args.downlink_schedule != "constant":
+    sched_kw = {"downlink_schedule": args.downlink_schedule,
+                "schedule_b_min": args.schedule_b_min}
+    if args.downlink_schedule == "cosine":
+        sched_kw["schedule_rounds"] = args.rounds
 fcfg = FederatedConfig(num_clients=cohort if use_cohort else args.clients,
                        local_steps=args.local_steps, local_lr=0.5,
                        aggregate=args.aggregate, downlink=args.downlink,
                        min_clients=args.min_clients,
-                       stream_chunk=args.stream_chunk)
+                       stream_chunk=args.stream_chunk, **sched_kw)
 # the round carry is the ENCODED broadcast: quantized codecs carry
 # uint8/uint16 wire words between rounds, never an f32 score slab
 state = encode_state(zspecs, fcfg, state)
@@ -170,9 +186,11 @@ FAULT_COLS = ("num_participating", "num_dropped", "num_stragglers",
 
 key = jax.random.PRNGKey(0)
 done = 0
+total_down = 0.0
 if use_cohort:
     print(f"{'round':>5} {'part':>4} {'drop':>4} {'strag':>5} {'corr':>4} "
-          f"{'dup':>3} {'skip':>4} {'w_sum':>7} {'uplink KiB':>10}")
+          f"{'dup':>3} {'skip':>4} {'w_sum':>7} {'uplink KiB':>10} "
+          f"{'down KiB':>8}")
 while done < args.rounds:
     # a tail block smaller than --block recompiles once for its shape
     r = min(args.block, args.rounds - done)
@@ -186,6 +204,7 @@ while done < args.rounds:
         )
         cols = {c: np.asarray(mets[c]) for c in FAULT_COLS}
         up = np.asarray(mets["uplink_bytes_round"])
+        down = np.asarray(mets["downlink_bytes_per_client"])
         wsum = np.asarray(mets["weight_sum"])
         for j in range(r):
             print(f"{done + j:>5} {cols['num_participating'][j]:>4.0f} "
@@ -194,7 +213,8 @@ while done < args.rounds:
                   f"{cols['num_corrupt'][j]:>4.0f} "
                   f"{cols['num_duplicates'][j]:>3.0f} "
                   f"{cols['round_skipped'][j]:>4.0f} "
-                  f"{wsum[j]:>7.0f} {up[j] / 1024:>10.1f}")
+                  f"{wsum[j]:>7.0f} {up[j] / 1024:>10.1f} "
+                  f"{down[j] / 1024:>8.1f}")
     else:
         xs, ys = zip(*(next(stream) for _ in range(r)))
         state, mets = fit_block(
@@ -204,10 +224,18 @@ while done < args.rounds:
         )
     done += r
     ms, std = evaluate(zspecs, state, acc, jax.random.PRNGKey(3),
-                       n_samples=10)
+                       n_samples=10, carried=args.downlink)
     losses = np.asarray(mets["loss"])
+    # realized (metered) downlink bytes per client, per round — a
+    # scheduled run charges only the scheduled width + lane padding
+    down = np.asarray(mets["downlink_bytes_per_client"], np.float64)
+    total_down += float(down.sum())
+    down_col = " ".join(f"{b / 1024:.1f}" for b in down)
     print(f"round {done:3d}: loss={losses[-1]:.3f} "
           f"(block mean {losses.mean():.3f}) "
-          f"sampled-acc={ms:.3f}+-{std:.3f}")
+          f"sampled-acc={ms:.3f}+-{std:.3f} down/client KiB: {down_col}")
+print(f"cumulative downlink: {total_down / 1024:.1f} KiB/client over "
+      f"{args.rounds} rounds ({args.downlink}, "
+      f"schedule={args.downlink_schedule})")
 print("done — every upload was a binary mask and every broadcast was "
       f"{args.downlink} wire words, never a naive float tensor.")

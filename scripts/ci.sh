@@ -85,18 +85,21 @@ if not {"fused", "lax_map"} <= strat:
 print(f"  ok: {len(thr)} threshold rows, strategies {sorted(strat)}")
 
 # downlink codec rows: every registered codec must be present with the
-# metered byte accounting, and u8's mask-only downlink bytes must be
-# <= 1/4 of the f32 broadcast — the codec subsystem's headline saving
-# must not silently regress.
+# metered byte accounting, u8's mask-only downlink bytes must be
+# <= 1/4 of the f32 broadcast, and the packed sub-byte codecs must
+# deliver their lane-packed savings (packed4 <= 1/8 of f32 + one
+# uint32 lane of tail padding per tensor) at <= 1.1x of u8's round
+# wall-clock — the codec subsystem's headline savings must not
+# silently regress.
 DOWN_KEYS = {"us", "downlink_bytes_per_client", "downlink_vs_f32", "K", "n"}
 down = [r for r in rows if r.get("bench") == "downlink_codec"]
 codecs = {r.get("codec") for r in down}
 bad = [r for r in down if not DOWN_KEYS <= set(r)]
-if not {"f32", "u16", "u8"} <= codecs or bad:
+if not {"f32", "u16", "u8", "packed4", "packed2"} <= codecs or bad:
     sys.exit(f"BENCH_reconstruct.json is stale: downlink codecs "
-             f"{sorted(codecs)} (need f32, u16, u8); rows missing keys: "
-             f"{bad}. Run `python -m benchmarks.run --only downlink` and "
-             f"commit.")
+             f"{sorted(codecs)} (need f32, u16, u8, packed4, packed2); "
+             f"rows missing keys: {bad}. Run `python -m benchmarks.run "
+             f"--only downlink` and commit.")
 by_key = {(r["codec"], r["K"]): r for r in down}
 unpaired = [r for r in down if r["codec"] == "u8"
             and ("f32", r["K"]) not in by_key]
@@ -110,8 +113,52 @@ fat = [r for r in down
        > by_key[("f32", r["K"])]["downlink_bytes_per_client"] / 4]
 if fat:
     sys.exit(f"u8 downlink bytes exceed 1/4 of f32: {fat}")
+# one uint32 lane of tail padding per tensor is the only allowed slack
+# over the exact 1/8; n is the total coordinate count, so bound the
+# tensor count by n (the slack term is tiny either way)
+LANE_SLACK = 4 * 64
+fat4 = [r for r in down
+        if r["codec"] == "packed4"
+        and r["downlink_bytes_per_client"]
+        > by_key[("f32", r["K"])]["downlink_bytes_per_client"] / 8
+        + LANE_SLACK]
+if fat4:
+    sys.exit(f"packed4 downlink bytes exceed 1/8 of f32 + lane slack: "
+             f"{fat4}")
+slow4 = [r for r in down
+         if r["codec"] == "packed4"
+         and ("u8", r["K"]) in by_key
+         and r["us"] > 1.1 * by_key[("u8", r["K"])]["us"]]
+if slow4:
+    sys.exit(f"packed4 round wall-clock exceeds 1.1x of u8 (the in-block "
+             f"lane unpack is no longer free): {slow4}")
 print(f"  ok: {len(down)} downlink rows, codecs {sorted(codecs)}, "
-      f"u8 <= 1/4 f32")
+      f"u8 <= 1/4 f32, packed4 <= 1/8 f32 at <= 1.1x u8 wall-clock")
+
+# downlink schedule rows: the adaptive rate controller must be measured
+# (constant on u8 plus cosine/frontier rows) with cumulative realized
+# bytes, and the frontier run must undercut constant u8's cumulative
+# downlink — the trade-off knob the schedule exists to turn.
+SCHED_KEYS = {"us", "downlink_bytes_per_client", "downlink_bytes_cumulative",
+              "rounds", "K", "n"}
+sched = [r for r in rows if r.get("bench") == "downlink_schedule"]
+strat = {r.get("strategy") for r in sched}
+bad = [r for r in sched if not SCHED_KEYS <= set(r)]
+if not {"constant_u8", "cosine_packed4", "frontier_u8"} <= strat or bad:
+    sys.exit(f"BENCH_reconstruct.json is stale: downlink schedule rows "
+             f"{sorted(strat)} (need constant_u8, cosine_packed4, "
+             f"frontier_u8); rows missing keys: {bad}. Run `python -m "
+             f"benchmarks.run --only downlink` and commit.")
+by_strat = {r["strategy"]: r for r in sched}
+if (by_strat["frontier_u8"]["downlink_bytes_cumulative"]
+        >= by_strat["constant_u8"]["downlink_bytes_cumulative"]):
+    sys.exit(f"frontier schedule no longer undercuts constant u8 "
+             f"cumulative downlink: {by_strat['frontier_u8']} vs "
+             f"{by_strat['constant_u8']}")
+print(f"  ok: {len(sched)} schedule rows {sorted(strat)}, frontier "
+      f"{by_strat['frontier_u8']['downlink_bytes_cumulative']:.0f}B < "
+      f"constant u8 "
+      f"{by_strat['constant_u8']['downlink_bytes_cumulative']:.0f}B")
 
 # fault-round rows: the partial-participation engine must be measured
 # at dropout {0, 0.2, 0.5} for K in {10, 32}, and the zero-fault
@@ -318,6 +365,10 @@ for r in rows:
               f"{r['us']/1e3:8.1f}ms  "
               f"down={r['downlink_bytes_per_client']:>10}B "
               f"({r['downlink_vs_f32']:.4f}x f32)")
+    elif r.get("bench") == "downlink_schedule":
+        print(f"  dsched {r['strategy']:>16}: {r['us']/1e3:8.1f}ms/round  "
+              f"cum={r['downlink_bytes_cumulative']:>8.0f}B over "
+              f"{r['rounds']} rounds")
     elif r.get("bench") == "fault_round":
         print(f"  fault dropout={r['dropout']:<4} K={r['K']:>3}: "
               f"{r['us']/1e3:8.1f}ms vs plain {r['plain_us']/1e3:8.1f}ms "

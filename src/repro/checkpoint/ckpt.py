@@ -5,9 +5,14 @@ stored (it regenerates from ``meta['q_seed']``), so the artifact is the
 score vectors (n floats ~ m/32), dense leaves, and optimizer state.
 
 A state that carries an ENCODED score vector (the u8/u16 downlink
-codec words — see ``comm/downlink.py``) round-trips at its wire dtype:
+codec words, or the packed sub-byte codecs' uint32 lanes — see
+``comm/downlink.py``) round-trips at its wire dtype:
 ``save_checkpoint`` records every leaf's dtype in the meta sidecar and
 ``load_checkpoint`` restores the SAVED dtype, never the template's.
+The frontier schedule's per-tensor width vector
+(``state['downlink_b']``, uint32) is an ordinary leaf and rides along
+bitwise — include it in the load template when restoring a scheduled
+carry.
 Casting to the template (the old behavior) silently widened a u8
 carry to the caller's f32 template — a 4x artifact blow-up AND a
 corruption: wire words reinterpreted as probabilities.  The template

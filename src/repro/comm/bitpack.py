@@ -104,3 +104,57 @@ def packed_total_popcount(packed):
     layer's server-side validation (``fault.validate``)."""
     bits = (packed[..., :, None] >> _shifts()) & jnp.uint32(1)
     return jnp.sum(bits, axis=(-1, -2), dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# b-bit WORD lanes (downlink): pack b-bit probability words, b in [1,16],
+# into uint32 lanes — the sub-byte codecs' wire format (comm.downlink
+# ``packed{b}``).  Same uint32-lane carrier as the mask packing above,
+# but each lane holds floor(32/b) words instead of 32 bits: word j of
+# lane i is coordinate ``i*wpl + j`` at bit offset ``b*j``.  A
+# non-divisor width (e.g. b=6, wpl=5) wastes the top ``32 mod b`` bits
+# of every lane; ``packed_word_len`` (and the codec's metering) counts
+# those padding bits as spent, so the metered bytes are the realized
+# wire bytes, not the information content.
+# ---------------------------------------------------------------------------
+
+def words_per_lane(bits: int) -> int:
+    """b-bit words per uint32 lane: floor(32 / b)."""
+    if not 1 <= bits <= 16:
+        raise ValueError(f"packed word width must be 1..16 bits, got {bits}")
+    return 32 // bits
+
+
+def packed_word_len(n: int, bits: int) -> int:
+    """uint32 lanes needed for n b-bit words: ceil(n / floor(32/b))."""
+    wpl = words_per_lane(bits)
+    return (n + wpl - 1) // wpl
+
+
+def _word_shifts(bits: int):
+    # fresh per call, like _shifts(): no tracer-leaking module cache
+    wpl = words_per_lane(bits)
+    return jnp.uint32(bits) * jnp.arange(wpl, dtype=jnp.uint32)
+
+
+def pack_words(q, bits: int):
+    """b-bit words ``(..., n)`` (any uint dtype, values < 2^b) ->
+    ``(..., packed_word_len(n, b))`` uint32 lanes; word j of lane i is
+    coordinate ``i*wpl + j`` at bit offset ``b*j``."""
+    wpl = words_per_lane(bits)
+    q = jnp.asarray(q)
+    n = q.shape[-1]
+    pad = packed_word_len(n, bits) * wpl - n
+    widths = [(0, 0)] * (q.ndim - 1) + [(0, pad)]
+    words = jnp.pad(q.astype(jnp.uint32), widths).reshape(
+        *q.shape[:-1], -1, wpl)
+    return jnp.sum(words << _word_shifts(bits), axis=-1, dtype=jnp.uint32)
+
+
+def unpack_words(lanes, n: int, bits: int):
+    """uint32 lanes ``(..., packed_word_len(n, b))`` -> ``(..., n)``
+    uint32 b-bit words — the exact inverse of ``pack_words`` (trailing
+    lane padding dropped)."""
+    mask = jnp.uint32((1 << bits) - 1)
+    words = (lanes[..., :, None] >> _word_shifts(bits)) & mask
+    return words.reshape(*lanes.shape[:-1], -1)[..., :n]

@@ -38,11 +38,55 @@ half-amplitude dither keeps the worst-case step error at 3/4 of a
 quantization step, so the encode→decode round trip is within
 ``2^-b`` of the input (pinned in tests/test_downlink.py).
 
+PACKED SUB-BYTE LANES (the ``packed{b}`` family).  Below 8 bits there
+is no native dtype to carry a word per coordinate, so the sub-byte
+codecs pack ``wpl = floor(32/b)`` b-bit words into each uint32 lane —
+the SAME uint32-lane carrier as the uplink mask packing
+(``comm.bitpack``; word j of lane i is coordinate ``i*wpl + j`` at bit
+offset ``b*j``, ``pack_words``/``unpack_words``).  The lanes are the
+round's NATIVE carried state through both scan fits: encode quantizes
+exactly as above and packs; the fused draw kernels
+(``kernels.qz_reconstruct``/``qz_decode``) take the lanes as their
+operand and unpack IN-BLOCK, per window tile, before the widened
+threshold compare — no per-coordinate word slab (let alone an f32
+score slab) ever materializes on the draw path (jaxpr-asserted in
+tests).  ``packed4``/``packed2`` (aliases ``u4``/``u2``) are
+registered by default; ``packed_codec(b)`` builds any width b in
+[1, 16].  Metering counts REALIZED lane bytes — ``32·ceil(n/wpl)``
+bits — so non-multiple-of-8 widths and the wasted top ``32 mod b``
+bits of a non-divisor width (e.g. b=6, wpl=5) are spent, not hidden.
+NOTE the routing consequence: every packed codec's wire dtype is
+uint32, so dtype sniffing (``codec_for_dtype``,
+``core.zampling.infer_downlink``) is AMBIGUOUS on packed carries and
+raises — route packed states by explicit tag (``carried=``/
+``downlink=`` arguments; ``meta['downlink']`` of a checkpoint).
+
+SCHEDULED RATE CONTROL (``FederatedConfig.downlink_schedule``).  The
+codec's width ``b_max = codec.bits`` is a CEILING, not the spent rate:
+``encode_at(spec, p, word, b)`` quantizes at any (possibly traced)
+width ``b <= b_max`` and EMBEDS the b-bit word into the codec's
+b_max-bit alphabet via
+
+    q_bmax = round(q_b * S_bmax / S_b)    (exact uint32 arithmetic),
+
+which is the IDENTITY at ``b = b_max`` (bit-for-bit the plain
+``encode``) and exact threshold equality ``T_bmax(q_bmax) = T_b(q_b)``
+whenever ``b | b_max`` (then ``S_b | S_bmax``); other widths round to
+the nearest representable threshold.  Only b bits per word cross the
+wire — the widening multiplier is a shared constant — so
+``comm.metering.scheduled_downlink_*`` meters the round at the
+scheduled width while the carry keeps ONE fixed lane layout and every
+consumer of the carry (fused kernels, serving, checkpoints) stays at
+the static ``b_max`` fast path.  ``core.federated`` turns this into
+the per-round, per-tensor controller (constant / cosine / frontier);
+the dither word is the round word either way, shared exactly as above.
+
 Registered codecs: ``f32`` (identity — the bit-exact oracle; a
 ``downlink='f32'`` round is bit-identical to the pre-codec protocol),
 ``u16`` and ``u8`` (16/8 bits per coordinate, 2x/4x downlink
-reduction).  ``comm.metering`` meters whichever codec the round
-configures, exactly.
+reduction), ``packed4`` and ``packed2`` (4/2 bits per coordinate in
+uint32 lanes, 8x/16x).  ``comm.metering`` meters whichever codec the
+round configures, exactly.
 
 DELTA WIRE FORMAT (serve.delta — the serving fleet's round update).
 A serving node already holds round t's word vector, so round t+1
@@ -55,7 +99,8 @@ apply.  On the wire each leaf ships the cheaper of
 
 plus one 4-byte draw word for the update (``comm.metering
 .delta_wire_bytes`` is the exact accounting; a full broadcast is
-``downlink_bits_per_client(n)/8``).  The format leans on a DITHER
+``downlink_bits_per_client(n)/8``; packed codecs delta whole uint32
+LANES — a lane is the atomic wire unit).  The format leans on a DITHER
 REUSE rule: the encode dither is keyed by ``word`` (above), so a
 server that re-encodes each round under a FRESH word re-dithers every
 coordinate and flips ~half the quantized words even when no score
@@ -74,6 +119,8 @@ from typing import Dict, List, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from .bitpack import pack_words, packed_word_len, unpack_words, words_per_lane
 
 # NOTE: no top-level ``repro.core`` import — ``core.federated`` imports
 # this package eagerly (registry validation at config construction), so
@@ -96,11 +143,17 @@ class DownlinkCodec:
     bits: int = 32  # wire bits per coordinate
     wire_dtype = jnp.float32
     quantized: bool = False  # True: wire words are b-bit uints
+    packed: bool = False  # True: wire is b-bit words in uint32 lanes
 
     def downlink_bits_per_client(self, n: int) -> int:
         """Exact bits the server puts on the wire per client for an
         n-coordinate score broadcast."""
         return self.bits * n
+
+    def wire_len(self, n: int) -> int:
+        """Wire-leaf length for an n-coordinate score vector (n for
+        the word-per-coordinate codecs; lane count for packed)."""
+        return n
 
     def encode(self, spec, scores, word):
         """f32 scores -> wire representation (``word``: the shared
@@ -111,8 +164,15 @@ class DownlinkCodec:
         """Wire representation -> f32 probabilities."""
         raise NotImplementedError
 
+    def wire_words(self, spec, wire):
+        """Encoded leaf -> per-coordinate b-bit words (identity for the
+        word-per-coordinate codecs; lane unpack for packed)."""
+        del spec
+        return wire
+
     def threshold_u24(self, wire):
-        """Wire words -> widened uint32 draw thresholds in [0, 2^24]."""
+        """Per-coordinate wire WORDS -> widened uint32 draw thresholds
+        in [0, 2^24] (packed codecs: ``wire_words`` first)."""
         raise NotImplementedError(
             f"codec {self.name!r} has no quantized threshold"
         )
@@ -159,6 +219,10 @@ class QuantizedDown(DownlinkCodec):
                      jnp.asarray(word, jnp.uint32), coords)
         return (u >> np.uint32(8)).astype(jnp.float32) * _INV_2_24
 
+    def _wire_of_words(self, q):
+        """Per-coordinate uint words -> this codec's wire leaf."""
+        return q.astype(self.wire_dtype)
+
     def encode(self, spec, scores, word):
         from ..core.sampling import clip_probs
 
@@ -166,16 +230,84 @@ class QuantizedDown(DownlinkCodec):
         d = self._dither(spec, word, p.shape[-1])
         q = jnp.floor(p * self._scale + np.float32(0.25)
                       + np.float32(0.5) * d)
-        return jnp.clip(q, 0.0, self._scale).astype(self.wire_dtype)
+        return self._wire_of_words(jnp.clip(q, 0.0, self._scale))
+
+    def encode_at(self, spec, scores, word, bits):
+        """Scheduled encode: quantize at (possibly TRACED) width
+        ``bits <= self.bits``, then embed in this codec's alphabet.
+
+        The b-bit word ``q_b = floor(p·S_b + 1/4 + dither/2)`` (the
+        same dither stream as ``encode``, so server and clients agree
+        with zero extra bits) is widened to ``q = round(q_b·S/S_b)``
+        with ``S = 2^self.bits - 1`` — exact uint32 arithmetic
+        ``(q_b·S + S_b//2) // S_b``, which is the bitwise identity at
+        ``bits == self.bits`` and the exact threshold embedding
+        ``T(q) == T_b(q_b)`` whenever ``bits | self.bits``.  Only
+        ``bits`` bits per word cross the wire (the widening is a shared
+        deterministic map); the carry keeps this codec's fixed wire
+        layout, so every downstream consumer stays on the static fast
+        path.  ``bits`` may be a traced uint32 scalar — the downlink
+        schedules re-quantize per round inside one compiled scan.
+        """
+        from ..core.sampling import clip_probs
+
+        p = clip_probs(jnp.asarray(scores, jnp.float32))
+        d = self._dither(spec, word, p.shape[-1])
+        b = jnp.asarray(bits).astype(jnp.uint32)
+        s_b = (jnp.uint32(1) << b) - jnp.uint32(1)
+        s_bf = s_b.astype(jnp.float32)
+        q_b = jnp.floor(p * s_bf + np.float32(0.25)
+                        + np.float32(0.5) * d)
+        q_b = jnp.clip(q_b, 0.0, s_bf).astype(jnp.uint32)
+        s_max = np.uint32((1 << self.bits) - 1)
+        q = (q_b * s_max + s_b // jnp.uint32(2)) // s_b
+        return self._wire_of_words(q)
 
     def decode(self, spec, wire):
-        del spec
-        return self.threshold_u24(wire).astype(jnp.float32) * _INV_2_24
+        words = self.wire_words(spec, wire)
+        return self.threshold_u24(words).astype(jnp.float32) * _INV_2_24
 
     def threshold_u24(self, wire):
         from ..core.sampling import quant_threshold_u24
 
         return quant_threshold_u24(wire, self.bits)
+
+
+class PackedDown(QuantizedDown):
+    """Sub-byte b-bit words packed into uint32 lanes (b in [1, 16]).
+
+    Quantization/threshold contract is EXACTLY ``QuantizedDown``'s —
+    same dither stream, same ``q = floor(p·S + 1/4 + dither/2)``, same
+    widened-threshold draw — only the carrier differs: ``floor(32/b)``
+    words per uint32 lane (``comm.bitpack.pack_words`` layout).  The
+    lanes are the carried state; the fused kernels unpack them
+    in-block (``kernels.qz_reconstruct``/``qz_decode``), and
+    ``downlink_bits_per_client`` meters the realized ``32·ceil(n/wpl)``
+    lane bits including padding.
+    """
+
+    packed = True
+
+    def __init__(self, name: str, bits: int):
+        super().__init__(name, bits, jnp.uint32)
+
+    @property
+    def words_per_lane(self) -> int:
+        return words_per_lane(self.bits)
+
+    def downlink_bits_per_client(self, n: int) -> int:
+        # realized lane bits: padding (the tail lane AND the wasted top
+        # 32 mod b bits of a non-divisor width) is spent, not hidden
+        return 32 * packed_word_len(n, self.bits)
+
+    def wire_len(self, n: int) -> int:
+        return packed_word_len(n, self.bits)
+
+    def _wire_of_words(self, q):
+        return pack_words(q.astype(jnp.uint32), self.bits)
+
+    def wire_words(self, spec, wire):
+        return unpack_words(wire, spec.n, self.bits)
 
 
 _REGISTRY: Dict[str, DownlinkCodec] = {}
@@ -208,16 +340,40 @@ def get_codec(name: str) -> DownlinkCodec:
     return _REGISTRY[canonical]
 
 
+def packed_codec(bits: int) -> PackedDown:
+    """The ``packed{b}`` codec for any width b in [1, 16] — registered
+    on first use (``packed4``/``packed2`` are pre-registered)."""
+    words_per_lane(bits)  # range check
+    name = f"packed{bits}"
+    if name not in _REGISTRY:
+        register_codec(PackedDown(name, bits))
+    return _REGISTRY[name]
+
+
 def codec_for_dtype(dtype) -> DownlinkCodec:
     """The quantized codec whose wire dtype matches, or ``f32`` for
     floating score leaves — how ``core.zampling.sample_weights`` infers
-    the broadcast representation from an encoded state."""
+    the broadcast representation from an encoded state.
+
+    VALIDATED FALLBACK only: every packed codec's wire dtype is uint32,
+    so a packed carry is ambiguous by dtype and this raises, listing
+    the candidates — route packed states by explicit tag
+    (``carried=``, ``meta['downlink']``) instead of sniffing.
+    """
     dtype = jnp.dtype(dtype)
     if jnp.issubdtype(dtype, jnp.floating):
         return get_codec("f32")
-    for codec in _REGISTRY.values():
-        if codec.quantized and jnp.dtype(codec.wire_dtype) == dtype:
-            return codec
+    matches = [c for c in _REGISTRY.values()
+               if c.quantized and jnp.dtype(c.wire_dtype) == dtype]
+    if len(matches) > 1:
+        raise ValueError(
+            f"dtype {dtype} is ambiguous between downlink codecs "
+            f"{', '.join(sorted(c.name for c in matches))}; route by "
+            f"explicit tag (carried=/downlink= argument, or the "
+            f"checkpoint's meta['downlink'])"
+        )
+    if matches:
+        return matches[0]
     raise ValueError(
         f"no downlink codec carries dtype {dtype}; registered: "
         f"{', '.join(codec_names())}"
@@ -227,3 +383,5 @@ def codec_for_dtype(dtype) -> DownlinkCodec:
 register_codec(F32Down())
 register_codec(QuantizedDown("u16", 16, jnp.uint16))
 register_codec(QuantizedDown("u8", 8, jnp.uint8))
+register_codec(PackedDown("packed4", 4), aliases=("u4",))
+register_codec(PackedDown("packed2", 2), aliases=("u2",))

@@ -54,6 +54,55 @@ def score_downlink_bytes(codec: DownlinkCodec, n: int) -> int:
     return -(-codec.downlink_bits_per_client(n) // 8)
 
 
+def scheduled_downlink_bits(n: int, bits):
+    """REALIZED downlink bits of one n-coordinate tensor broadcast at a
+    (possibly TRACED) scheduled width ``bits``: b-bit words packed into
+    uint32 lanes, ``32 · ceil(n / floor(32/b))`` — lane padding and the
+    wasted top ``32 mod b`` bits of a non-divisor width included, so a
+    scheduled round meters what actually crosses the wire, never the
+    idealized ``b·n``.  Returns a traced uint32 scalar when ``bits`` is
+    traced (the schedule metrics inside the compiled round), a python
+    int otherwise."""
+    if isinstance(bits, (int,)):
+        wpl = 32 // bits
+        return 32 * ((n + wpl - 1) // wpl)
+    import jax.numpy as jnp
+
+    b = jnp.asarray(bits).astype(jnp.uint32)
+    wpl = jnp.uint32(32) // b
+    lanes = (jnp.uint32(n) + wpl - jnp.uint32(1)) // wpl
+    return jnp.uint32(32) * lanes
+
+
+def scheduled_wire_metrics(report, zspecs, b_vec, num_clients,
+                           dense_bytes=None):
+    """Override a round report's CONFIGURED downlink byte counts with
+    the REALIZED counts of a scheduled round (``FederatedConfig
+    .downlink_schedule``): per-tensor bits from
+    ``scheduled_downlink_bits`` at the round's traced per-tensor width
+    vector ``b_vec`` (ordered as ``zspecs.specs``), dense leaves still
+    f32.  The overridden values are traced f32 scalars; the key set is
+    unchanged, so round-metrics consumers (shard_map out_specs,
+    ``ROUND_METRIC_KEYS``) never see a schedule-dependent tree."""
+    import jax.numpy as jnp
+
+    b_vec = jnp.asarray(b_vec).astype(jnp.uint32)
+    bits = jnp.uint32(0)
+    for i, spec in enumerate(zspecs.specs.values()):
+        bits = bits + scheduled_downlink_bits(spec.n, b_vec[i])
+    if dense_bytes is None:
+        dense_bytes = _F32_BYTES * zspecs.dense_total
+    down = jnp.ceil(bits.astype(jnp.float32) / 8.0) + jnp.float32(
+        dense_bytes)
+    down_f32 = float(_F32_BYTES * zspecs.n_total + dense_bytes)
+    return {
+        **report,
+        "downlink_bytes_per_client": down,
+        "downlink_bytes_round": down * jnp.float32(num_clients),
+        "downlink_vs_f32": down / jnp.float32(down_f32),
+    }
+
+
 def delta_wire_bytes(total_words: int, changed_words: int,
                      word_bytes: int) -> int:
     """Exact wire bytes of a sparse word delta (serve.delta).
@@ -283,6 +332,7 @@ def downlink_table(zspecs, num_clients: int,
 
 __all__ = [
     "mask_uplink_bytes", "score_downlink_bytes", "delta_wire_bytes",
+    "scheduled_downlink_bits", "scheduled_wire_metrics",
     "round_wire_report",
     "realized_wire_metrics", "upload_slab_bytes", "streaming_peak_bytes",
     "serve_resident_bytes", "serve_tile_pool_bytes",

@@ -139,20 +139,37 @@ import jax
 import jax.numpy as jnp
 
 from ..comm.downlink import codec_names, get_codec
-from ..comm.metering import realized_wire_metrics, round_wire_report
+from ..comm.metering import (
+    realized_wire_metrics,
+    round_wire_report,
+    scheduled_wire_metrics,
+)
 from ..comm.protocol import resolve_transport, transport_names
 from ..optim import Optimizer, sgd
-from .sampling import as_word, fold_word
+from .sampling import (as_word, clip_probs, fold_word,
+                       quant_threshold_u24_dyn)
 from .zampling import (
     MaskProgram,
     ZamplingSpecs,
     infer_downlink,
+    validate_carried,
     validate_mask_mode,
 )
 
 LossFn = Callable[[Any, Any], jnp.ndarray]  # (params, batch) -> scalar
 
 _MASK_PATHS = ("fused", "composed")
+
+# downlink rate-control schedules (FederatedConfig.downlink_schedule):
+#   constant — every round broadcasts at the codec's full width; the
+#              plain fixed-codec path runs untouched (b_vec is None)
+#   cosine   — anneal the width from schedule_b_min up to codec.bits
+#              over schedule_rounds rounds (coarse early rounds, full
+#              precision at convergence)
+#   frontier — per-tensor widths adapted from MEASURED score dynamics:
+#              the fraction of draw words that would flip between b and
+#              b+2 bits, computed on the already-encoded carry
+DOWNLINK_SCHEDULES = ("constant", "cosine", "frontier")
 
 
 @dataclass(frozen=True)
@@ -175,6 +192,22 @@ class FederatedConfig:
     # slab path; a chunk >= K also falls through to it (one chunk IS
     # the slab).  Scores are bit-identical either way.
     stream_chunk: int = 0
+    # adaptive downlink rate control (DOWNLINK_SCHEDULES): the round's
+    # broadcast is re-quantized at a per-round (frontier: per-tensor)
+    # width b <= codec.bits.  The CARRY stays the codec's fixed-width
+    # wire representation (the scheduled word is widened by the exact
+    # divisor embedding, comm.downlink.QuantizedDown.encode_at), so the
+    # width vector is a TRACED per-round value — R rounds compile once
+    # and every carry consumer (fused kernels, serve, checkpoint) stays
+    # on the static fast path.  Only b bits/coord are metered as
+    # crossing the wire (the widening is a shared deterministic map).
+    downlink_schedule: str = "constant"
+    schedule_b_min: int = 2  # the schedules' floor width
+    schedule_rounds: int = 0  # cosine anneal horizon (rounds)
+    # frontier controller: raise b by 2 when the measured draw-word
+    # flip fraction between b and b+2 exceeds this; lower b by 2 when
+    # it falls under a quarter of it
+    frontier_threshold: float = 0.02
 
     def __post_init__(self):
         if self.min_clients < 1:
@@ -202,6 +235,38 @@ class FederatedConfig:
                 f"unknown mask_path {self.mask_path!r}; valid paths: "
                 f"{', '.join(_MASK_PATHS)}"
             )
+        if self.downlink_schedule not in DOWNLINK_SCHEDULES:
+            raise ValueError(
+                f"unknown downlink_schedule {self.downlink_schedule!r}; "
+                f"valid schedules: {', '.join(DOWNLINK_SCHEDULES)}"
+            )
+        if self.downlink_schedule != "constant":
+            codec = get_codec(self.downlink)
+            if not codec.quantized:
+                raise ValueError(
+                    f"downlink_schedule={self.downlink_schedule!r} needs "
+                    f"a quantized downlink codec to rate-control; "
+                    f"{self.downlink!r} is not quantized"
+                )
+            if not 1 <= self.schedule_b_min <= codec.bits:
+                raise ValueError(
+                    f"schedule_b_min must be in [1, {codec.bits}] for "
+                    f"downlink codec {self.downlink!r}, got "
+                    f"{self.schedule_b_min}"
+                )
+            if (self.downlink_schedule == "cosine"
+                    and self.schedule_rounds < 1):
+                raise ValueError(
+                    "downlink_schedule='cosine' needs schedule_rounds "
+                    f">= 1 (the anneal horizon), got "
+                    f"{self.schedule_rounds}"
+                )
+            if (self.downlink_schedule == "frontier"
+                    and self.frontier_threshold <= 0):
+                raise ValueError(
+                    "frontier_threshold must be > 0, got "
+                    f"{self.frontier_threshold}"
+                )
 
 
 def mask_program(zspecs: ZamplingSpecs, cfg: FederatedConfig) -> MaskProgram:
@@ -225,6 +290,19 @@ def mask_program(zspecs: ZamplingSpecs, cfg: FederatedConfig) -> MaskProgram:
     )
 
 
+def _with_schedule_state(zspecs: ZamplingSpecs, cfg: FederatedConfig,
+                         state):
+    """Attach the frontier schedule's carried per-tensor width vector
+    to an encoded state (identity for the other schedules, and for a
+    state that already carries one).  Widths start at the floor
+    ``schedule_b_min`` — the controller raises them as the measured
+    score dynamics demand."""
+    if cfg.downlink_schedule != "frontier" or "downlink_b" in state:
+        return state
+    b0 = jnp.full((len(zspecs.specs),), cfg.schedule_b_min, jnp.uint32)
+    return {**state, "downlink_b": b0}
+
+
 def encode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state,
                  word=0):
     """Encode an f32 score state into ``cfg.downlink``'s wire
@@ -234,11 +312,20 @@ def encode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state,
     ``downlink='f32'``.  Idempotent: a state already carrying
     ``cfg.downlink``'s wire words passes through unchanged (encoding
     wire words as if they were f32 scores would saturate them all to
-    the top code); a state encoded with a DIFFERENT codec raises."""
+    the top code); a state encoded with a DIFFERENT codec raises.  The
+    match is a full SIGNATURE check (dtype + packed lane count, the
+    explicit-tag validation of ``core.zampling.validate_carried``) —
+    the packed sub-byte codecs all share the uint32 carrier, so dtype
+    sniffing alone cannot tell them apart.  With the frontier schedule
+    the returned state additionally carries the per-tensor width
+    vector ``state['downlink_b']``."""
     codec = get_codec(cfg.downlink)
+    try:
+        validate_carried(zspecs, state["scores"], codec.name)
+        return _with_schedule_state(zspecs, cfg, state)
+    except ValueError:
+        pass
     carried = infer_downlink(state["scores"])
-    if carried == codec.name:
-        return state
     if carried != "f32":
         raise ValueError(
             f"state is already encoded with downlink codec {carried!r}; "
@@ -246,13 +333,13 @@ def encode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state,
             f"{codec.name!r}"
         )
     if not codec.quantized:
-        return state
+        return _with_schedule_state(zspecs, cfg, state)
     w = as_word(word)
     scores = {
         path: codec.encode(spec, state["scores"][path], w)
         for path, spec in zspecs.specs.items()
     }
-    return {**state, "scores": scores}
+    return _with_schedule_state(zspecs, cfg, {**state, "scores": scores})
 
 
 def decode_state(zspecs: ZamplingSpecs, cfg: FederatedConfig, state):
@@ -362,19 +449,30 @@ ROUND_METRIC_KEYS = ("loss",) + WIRE_METRIC_KEYS + PARTICIPATION_METRIC_KEYS
 
 
 def _wire_metrics(zspecs: ZamplingSpecs, cfg: FederatedConfig,
-                  num_clients: int):
+                  num_clients: int, b_vec=None):
     """Exact byte counts for this round's traffic (static per config).
 
     ``num_clients`` is the round's REALIZED cohort size — the stacked
     batch's leading axis on the vmap path, the mesh axis size on the
     sharded path — never ``cfg.num_clients``, which only names the
     default population size.
+
+    ``b_vec``: a scheduled round's traced per-tensor width vector —
+    the downlink counts are overridden with the REALIZED bits at those
+    widths (``comm.metering.scheduled_wire_metrics``: lane packing and
+    padding included), so the metrics report what actually crossed the
+    wire, not the carry's configured width.  Key set unchanged (values
+    become traced f32).
     """
     rep = round_wire_report(
         zspecs, cfg.aggregate, num_clients,
         mode=cfg.mode, downlink=cfg.downlink,
     )
-    return {k: rep[k] for k in WIRE_METRIC_KEYS}
+    out = {k: rep[k] for k in WIRE_METRIC_KEYS}
+    if b_vec is not None:
+        sched = scheduled_wire_metrics(out, zspecs, b_vec, num_clients)
+        out = {k: sched[k] for k in WIRE_METRIC_KEYS}
+    return out
 
 
 def _full_participation_metrics(k: int):
@@ -393,7 +491,7 @@ def _full_participation_metrics(k: int):
 
 
 def _encode_scores(zspecs: ZamplingSpecs, cfg: FederatedConfig,
-                   scores, key, round_index):
+                   scores, key, round_index, b_vec=None):
     """Re-encode the aggregated p(t+1) as the next round's broadcast.
 
     The dither word ``fold_word(key_word(key), round_index)`` is
@@ -401,15 +499,122 @@ def _encode_scores(zspecs: ZamplingSpecs, cfg: FederatedConfig,
     shard_map shard produce bit-identical encodings (the dither stream
     has its own counter space — it can never alias a client draw
     word).  Identity for ``downlink='f32'``.
+
+    ``b_vec``: the scheduled round's traced per-tensor widths — tensor
+    i quantizes at ``b_vec[i]`` bits and the scheduled word is widened
+    into the codec's fixed carry width by the exact divisor embedding
+    (``encode_at``); only b bits/coord cross the wire.  ``None`` (the
+    constant schedule) is the plain fixed-width path, bitwise
+    untouched.
     """
     codec = get_codec(cfg.downlink)
     if not codec.quantized:
         return scores
     w = fold_word(as_word(key), jnp.asarray(round_index).astype(jnp.uint32))
+    if b_vec is None:
+        return {
+            path: codec.encode(spec, scores[path], w)
+            for path, spec in zspecs.specs.items()
+        }
     return {
-        path: codec.encode(spec, scores[path], w)
-        for path, spec in zspecs.specs.items()
+        path: codec.encode_at(spec, scores[path], w, b_vec[i])
+        for i, (path, spec) in enumerate(zspecs.specs.items())
     }
+
+
+def _round_b_vec(zspecs: ZamplingSpecs, cfg: FederatedConfig, state,
+                 round_index):
+    """This round's per-tensor downlink width vector (traced uint32),
+    or ``None`` on the constant schedule (the plain fixed-codec path).
+
+    cosine: one width for every tensor, annealed from
+    ``schedule_b_min`` up to the codec's full width over
+    ``schedule_rounds`` rounds (half-cosine, clamped at the horizon) —
+    coarse broadcasts while the scores are still moving fast, full
+    precision at convergence.  frontier: the carried measured widths
+    ``state['downlink_b']`` (updated per round by
+    ``_frontier_next_b``).  Both are functions of traced per-round
+    values only, so an R-round scan compiles ONCE.
+    """
+    if cfg.downlink_schedule == "constant":
+        return None
+    if cfg.downlink_schedule == "frontier":
+        b = state.get("downlink_b")
+        if b is None:  # direct round call without encode_state
+            b = jnp.full((len(zspecs.specs),), cfg.schedule_b_min,
+                         jnp.uint32)
+        return jnp.asarray(b).astype(jnp.uint32)
+    codec = get_codec(cfg.downlink)
+    horizon = jnp.float32(cfg.schedule_rounds)
+    t = jnp.minimum(jnp.asarray(round_index).astype(jnp.float32), horizon)
+    span = jnp.float32(codec.bits - cfg.schedule_b_min)
+    b = (jnp.float32(cfg.schedule_b_min)
+         + span * (1.0 - jnp.cos(jnp.pi * t / horizon)) * 0.5)
+    b = jnp.clip(jnp.round(b), cfg.schedule_b_min, codec.bits)
+    return jnp.full((len(zspecs.specs),), 1, jnp.uint32) * b.astype(
+        jnp.uint32)
+
+
+def _flip_fraction(p, b, b_hi):
+    """Expected fraction of draw words that flip between widths ``b``
+    and ``b_hi`` for probabilities ``p``: the draw at width b fires
+    iff ``(u >> 8) < T_b``, so for a uniform word the flip probability
+    at one coordinate is ``|T_b - T_hi| * 2^-24`` — no dither, no
+    draws: a deterministic probe of how much probability mass the
+    coarser lattice is displacing."""
+    def thr(bits):
+        bf = ((jnp.uint32(1) << bits) - jnp.uint32(1)).astype(jnp.float32)
+        q = jnp.clip(jnp.floor(p * bf + 0.5), 0.0, bf).astype(jnp.uint32)
+        return quant_threshold_u24_dyn(q, bits)
+
+    t_lo, t_hi = thr(b), thr(b_hi)
+    diff = jnp.where(t_lo > t_hi, t_lo - t_hi, t_hi - t_lo)
+    return jnp.mean(diff.astype(jnp.float32)) * jnp.float32(2.0 ** -24)
+
+
+def _frontier_next_b(zspecs: ZamplingSpecs, cfg: FederatedConfig,
+                     agg, b_vec):
+    """The frontier controller: next round's per-tensor widths from
+    the round's f32 aggregate — the scores ABOUT to be encoded, probed
+    BEFORE the lattice coarsens them (the decoded b-bit carry sits
+    exactly on the b-bit lattice, so a post-encode probe would read a
+    flip fraction of zero forever).  Tensor i probes the draw-word
+    flip fraction between its current width b and b+2
+    (``_flip_fraction``; the aggregate is replicated post-collective,
+    so every shard computes the identical widths); flips above
+    ``frontier_threshold`` mean the coarse lattice is audibly
+    displacing mass -> widen by 2, flips under a quarter of it mean
+    precision is being wasted -> narrow by 2.  Clamped to
+    [schedule_b_min, codec.bits]."""
+    codec = get_codec(cfg.downlink)
+    b_max = jnp.uint32(codec.bits)
+    nxt = []
+    for i, (path, spec) in enumerate(zspecs.specs.items()):
+        b = b_vec[i]
+        p = clip_probs(jnp.asarray(agg[path], jnp.float32))
+        flip = _flip_fraction(p, b, jnp.minimum(b + jnp.uint32(2), b_max))
+        up = flip > jnp.float32(cfg.frontier_threshold)
+        down = flip < jnp.float32(cfg.frontier_threshold / 4.0)
+        nb = jnp.where(up, b + jnp.uint32(2),
+                       jnp.where(down & (b > jnp.uint32(2)),
+                                 b - jnp.uint32(2), b))
+        nxt.append(jnp.clip(nb, jnp.uint32(cfg.schedule_b_min), b_max))
+    return jnp.stack(nxt)
+
+
+def _schedule_state_out(zspecs: ZamplingSpecs, cfg: FederatedConfig,
+                        agg, state, b_vec, skip=None):
+    """The extra carried leaves of a scheduled round's output state
+    (frontier's width vector, measured on the round's f32 aggregate;
+    empty otherwise).  On a skipped round the widths pass through
+    unchanged with the rest of the carry."""
+    if cfg.downlink_schedule != "frontier":
+        return {}
+    nb = _frontier_next_b(zspecs, cfg, agg, b_vec)
+    if skip is not None:
+        nb = jnp.where(skip, jnp.asarray(state["downlink_b"],
+                                         jnp.uint32), nb)
+    return {"downlink_b": nb}
 
 
 def _aggregate_stacked(zspecs, transport, packed, z_all):
@@ -602,7 +807,8 @@ def _streaming_round(zspecs, state, loss_fn, client_batches, key, cfg,
         p: (v.astype(jnp.float32) if packed else v) * recip
         for p, v in acc["votes"].items()
     }
-    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    b_vec = _round_b_vec(zspecs, cfg, state, round_index)
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index, b_vec)
     new_dense_agg = jax.tree.map(lambda a: a * recip, acc["dense"])
     skip = acc["num_participating"] < cfg.min_clients
     new_scores = {
@@ -618,7 +824,7 @@ def _streaming_round(zspecs, state, loss_fn, client_batches, key, cfg,
     loss = acc["loss"] * (jnp.float32(1.0) / safe_cnt)
     metrics = {
         "loss": loss,
-        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k),
+        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k, b_vec),
                                 acc["uplink_units"], k),
         "cohort_size": float(k),
         **{c: acc[c] for c in _STREAM_COUNTER_KEYS
@@ -626,7 +832,9 @@ def _streaming_round(zspecs, state, loss_fn, client_batches, key, cfg,
         "weight_sum": wsum,
         "round_skipped": skip.astype(jnp.float32),
     }
-    return {"scores": new_scores, "dense": new_dense}, metrics
+    return {"scores": new_scores, "dense": new_dense,
+            **_schedule_state_out(zspecs, cfg, agg, state, b_vec,
+                                  skip)}, metrics
 
 
 def federated_round(
@@ -693,16 +901,17 @@ def federated_round(
         # server aggregation: p(t+1) = mean_k z^(k), via the wire
         # transport, re-encoded as the next broadcast (cfg.downlink's
         # wire words)
-        new_scores = _encode_scores(
-            zspecs, cfg,
-            _aggregate_stacked(zspecs, transport, packed, z_all),
-            key, round_index,
-        )
+        b_vec = _round_b_vec(zspecs, cfg, state, round_index)
+        agg = _aggregate_stacked(zspecs, transport, packed, z_all)
+        new_scores = _encode_scores(zspecs, cfg, agg, key, round_index,
+                                    b_vec)
         new_dense = jax.tree.map(lambda d: jnp.mean(d, axis=0), dense_all)
         metrics = {"loss": jnp.mean(losses),
-                   **_wire_metrics(zspecs, cfg, k),
+                   **_wire_metrics(zspecs, cfg, k, b_vec),
                    **_full_participation_metrics(k)}
-        return {"scores": new_scores, "dense": new_dense}, metrics
+        return {"scores": new_scores, "dense": new_dense,
+                **_schedule_state_out(zspecs, cfg, agg, state,
+                                      b_vec)}, metrics
 
     # ---- partial participation: faults -> validation -> weighted mean
     z_wire, codes, arrived, participating = _resolve_faults(
@@ -732,7 +941,8 @@ def federated_round(
             for p, z in z_wire.items()
         }
     counters = _fault_counts(codes, arrived, participating)
-    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    b_vec = _round_b_vec(zspecs, cfg, state, round_index)
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index, b_vec)
     w_f = w_eff.astype(jnp.float32)
 
     def dense_mean(d):
@@ -758,14 +968,16 @@ def federated_round(
     uplink_units = counters.pop("uplink_units")
     metrics = {
         "loss": loss,
-        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k),
+        **realized_wire_metrics(_wire_metrics(zspecs, cfg, k, b_vec),
                                 uplink_units, k),
         "cohort_size": float(k),
         **counters,
         "weight_sum": wsum,
         "round_skipped": skip.astype(jnp.float32),
     }
-    return {"scores": new_scores, "dense": new_dense}, metrics
+    return {"scores": new_scores, "dense": new_dense,
+            **_schedule_state_out(zspecs, cfg, agg, state, b_vec,
+                                  skip)}, metrics
 
 
 def sharded_client_update(
@@ -839,9 +1051,12 @@ def sharded_client_update(
         # re-encode the replicated aggregate as the next broadcast: the
         # dither word comes from the replicated (key, round_index), so
         # all shards produce the identical encoding — bit-equal to the
-        # vmap path
-        new_scores = _encode_scores(zspecs, cfg, new_scores, key,
-                                    round_index)
+        # vmap path (the schedule's b_vec is likewise a function of
+        # replicated values only)
+        b_vec = _round_b_vec(zspecs, cfg, state, round_index)
+        agg = new_scores
+        new_scores = _encode_scores(zspecs, cfg, agg, key,
+                                    round_index, b_vec)
         # dense leaves stay on the f32 psum path: XLA:CPU's
         # AllReducePromotion pass aborts on bf16 all-reduces (and f32
         # is the numerically right accumulator anyway)
@@ -852,9 +1067,12 @@ def sharded_client_update(
         )
         loss = jax.lax.pmean(loss, axis_names)
         # the mesh axis size, not cfg.num_clients, is the real K here
-        metrics = {"loss": loss, **_wire_metrics(zspecs, cfg, nclients),
+        metrics = {"loss": loss,
+                   **_wire_metrics(zspecs, cfg, nclients, b_vec),
                    **_full_participation_metrics(nclients)}
-        return {"scores": new_scores, "dense": new_dense}, metrics
+        return {"scores": new_scores, "dense": new_dense,
+                **_schedule_state_out(zspecs, cfg, agg, state,
+                                      b_vec)}, metrics
 
     # ---- partial participation: every per-client quantity is a
     # per-shard scalar; the psums realize the weighted server sum
@@ -883,7 +1101,8 @@ def sharded_client_update(
             ) * recip
             for p, z in z_wire.items()
         }
-    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index)
+    b_vec = _round_b_vec(zspecs, cfg, state, round_index)
+    new_enc = _encode_scores(zspecs, cfg, agg, key, round_index, b_vec)
     counters = {
         k: jax.lax.psum(v, tuple(axis_names))
         for k, v in _fault_counts(code, arrived, participating).items()
@@ -911,11 +1130,14 @@ def sharded_client_update(
     uplink_units = counters.pop("uplink_units")
     metrics = {
         "loss": loss,
-        **realized_wire_metrics(_wire_metrics(zspecs, cfg, nclients),
-                                uplink_units, nclients),
+        **realized_wire_metrics(
+            _wire_metrics(zspecs, cfg, nclients, b_vec),
+            uplink_units, nclients),
         "cohort_size": float(nclients),
         **counters,
         "weight_sum": wsum,
         "round_skipped": skip.astype(jnp.float32),
     }
-    return {"scores": new_scores, "dense": new_dense}, metrics
+    return {"scores": new_scores, "dense": new_dense,
+            **_schedule_state_out(zspecs, cfg, agg, state, b_vec,
+                                  skip)}, metrics

@@ -144,6 +144,24 @@ def quant_threshold_u24(q, bits: int):
     return a + a // np.uint32((1 << bits) - 1)
 
 
+def quant_threshold_u24_dyn(q, bits):
+    """``quant_threshold_u24`` with a TRACED bit width.
+
+    Same exact integer identity ``T(q) = a + a // S`` with
+    ``a = q << (24 - b)`` and ``S = 2^b - 1``, but ``bits`` may be a
+    traced uint32 array (a per-round scheduled width, broadcasting
+    against ``q``) — uint32 shifts by traced counts and divisions by
+    traced divisors are exact, so for any concrete b in [1, 16] the
+    result is bit-identical to the static ``quant_threshold_u24(q, b)``.
+    This is what lets the downlink schedules (``core.federated``,
+    ``FederatedConfig.downlink_schedule``) re-quantize every round at a
+    per-tensor width while the R-round scan still compiles once.
+    """
+    b = jnp.asarray(bits).astype(jnp.uint32)
+    a = jnp.asarray(q).astype(jnp.uint32) << (jnp.uint32(24) - b)
+    return a + a // ((jnp.uint32(1) << b) - jnp.uint32(1))
+
+
 def sample_mask_qhash(q, bits: int, seed, tensor_id, step):
     """z ~ Bern(T(q)/2^24) drawn straight from QUANTIZED probability
     words — the integer compare of the draw word against the widened

@@ -303,7 +303,10 @@ class MaskProgram:
         return get_codec(self.downlink)
 
     def _wire_words(self, wire_scores, path: str):
-        """Validate + fetch one tensor's encoded broadcast words."""
+        """Validate + fetch one tensor's encoded broadcast leaf (b-bit
+        words, or uint32 LANES for the packed codecs — lane count
+        validated against the spec, since every packed codec shares the
+        uint32 carrier and dtype alone cannot tell them apart)."""
         codec = self.codec
         q = wire_scores[path]
         if jnp.asarray(q).dtype != jnp.dtype(codec.wire_dtype):
@@ -313,6 +316,16 @@ class MaskProgram:
                 f"{jnp.dtype(codec.wire_dtype).name}; encode the state "
                 f"first (core.federated.encode_state)"
             )
+        if codec.packed:
+            spec = self.zspecs.specs[path]
+            want = codec.wire_len(spec.n)
+            got = jnp.shape(q)[-1]
+            if got != want:
+                raise ValueError(
+                    f"score leaf {path!r} has {got} uint32 lanes but "
+                    f"codec {codec.name!r} packs n={spec.n} words into "
+                    f"{want} lanes — wrong packed codec for this carry?"
+                )
         return q
 
     def decode_scores(self, wire_scores) -> Dict[str, Any]:
@@ -419,11 +432,12 @@ class MaskProgram:
         if not codec.quantized:
             return self.mask(clip_probs(q), spec, step)
         if self.mode == "sample":
-            return sample_mask_qhash(q, codec.bits, spec.seed,
+            return sample_mask_qhash(codec.wire_words(spec, q),
+                                     codec.bits, spec.seed,
                                      spec.tensor_id, step)
         if self.mode == "continuous":
             return codec.decode(spec, q)
-        thr = codec.threshold_u24(q)
+        thr = codec.threshold_u24(codec.wire_words(spec, q))
         return (thr >= jnp.uint32(1 << 23)).astype(jnp.float32)
 
     def masks_from_wire(self, wire_scores, step) -> Dict[str, Any]:
@@ -463,7 +477,8 @@ class MaskProgram:
         for path, spec in self.zspecs.specs.items():
             w = ops.sample_reconstruct(
                 spec, self._wire_words(wire_scores, path), step,
-                qbits=codec.bits, dtype=tmpl[path].dtype,
+                qbits=codec.bits, qpacked=codec.packed,
+                dtype=tmpl[path].dtype,
                 chunks=self.zspecs.config.chunks, impl=self.impl,
                 row_sharding=row_sharding,
             )
@@ -478,9 +493,12 @@ class MaskProgram:
 def infer_downlink(scores) -> str:
     """Infer the broadcast codec of a score pytree from its leaf dtypes
     — floating leaves are plain/``f32`` scores, uint leaves name the
-    quantized codec that carries them (each codec has a unique wire
-    dtype).  Lets ``sample_weights``/``evaluate`` consume a
-    codec-encoded round carry directly."""
+    quantized codec that carries them.  VALIDATED FALLBACK only: every
+    packed codec's wire dtype is uint32, so dtype sniffing RAISES on a
+    packed carry (``comm.downlink.codec_for_dtype``) — route those by
+    explicit tag (``carried=`` on ``sample_weights``/``sample_masks``/
+    ``evaluate``/``make_serve_state``, or the checkpoint's
+    ``meta['downlink']``)."""
     from ..comm.downlink import codec_for_dtype  # comm sits above core
 
     dtypes = {jnp.asarray(v).dtype for v in scores.values()}
@@ -492,14 +510,57 @@ def infer_downlink(scores) -> str:
     return names.pop() if names else "f32"
 
 
-def sample_masks(zspecs: ZamplingSpecs, state, key, mode: Optional[str] = None):
+def validate_carried(zspecs: ZamplingSpecs, scores, carried: str) -> str:
+    """Validate an EXPLICIT codec tag against the score leaves and
+    return the canonical codec name — the tag-routing counterpart of
+    ``infer_downlink`` (which cannot distinguish the uint32-laned
+    packed codecs).  Checks dtype for every codec and the per-tensor
+    lane count for the packed family, so a wrong tag fails loudly
+    instead of mis-decoding the carry."""
+    from ..comm.downlink import get_codec  # comm sits above core
+
+    codec = get_codec(carried)
+    for path, spec in zspecs.specs.items():
+        leaf = jnp.asarray(scores[path])
+        if codec.quantized:
+            ok = (leaf.dtype == jnp.dtype(codec.wire_dtype)
+                  and leaf.shape[-1] == codec.wire_len(spec.n))
+        else:
+            ok = jnp.issubdtype(leaf.dtype, jnp.floating)
+        if not ok:
+            raise ValueError(
+                f"score leaf {path!r} (dtype {leaf.dtype}, trailing dim "
+                f"{leaf.shape[-1]}) cannot carry the tagged codec "
+                f"{codec.name!r} (wire dtype "
+                f"{jnp.dtype(codec.wire_dtype).name}, wire length "
+                f"{codec.wire_len(spec.n)} for n={spec.n})"
+            )
+    return codec.name
+
+
+def resolve_carried(zspecs: ZamplingSpecs, scores,
+                    carried: Optional[str] = None) -> str:
+    """The ONE carried-representation resolver: an explicit tag is
+    validated (``validate_carried``); without one, dtype sniffing
+    (``infer_downlink``) is the fallback and raises on ambiguity."""
+    if carried is not None:
+        return validate_carried(zspecs, scores, carried)
+    return infer_downlink(scores)
+
+
+def sample_masks(zspecs: ZamplingSpecs, state, key,
+                 mode: Optional[str] = None,
+                 carried: Optional[str] = None):
     """{path: z} straight-through masks, one fresh draw per tensor.
 
     ``key``: a PRNG key or uint32 draw word (``core.sampling.as_word``).
-    Codec-encoded score states (a quantized round carry) are detected
-    by dtype and drawn through the widened-threshold integer compare.
+    ``carried`` names the codec of an encoded score state explicitly
+    (required for the packed uint32-lane codecs); without it the
+    representation is inferred from leaf dtypes, which raises on
+    ambiguity.  Quantized carries draw through the widened-threshold
+    integer compare.
     """
-    downlink = infer_downlink(state["scores"])
+    downlink = resolve_carried(zspecs, state["scores"], carried)
     program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
                           fused=False, downlink=downlink)
     if program.codec.quantized:
@@ -540,28 +601,32 @@ def sample_weights(zspecs: ZamplingSpecs, state, key,
                    mode: Optional[str] = None,
                    constraints: Optional[Dict[str, Any]] = None,
                    row_sharding=None, fused: bool = True,
-                   downlink: Optional[str] = None):
+                   downlink: Optional[str] = None,
+                   carried: Optional[str] = None):
     """One fresh sampled network: params pytree matching the template.
 
     Routes through ``MaskProgram``: with ``fused`` (default) the
     sample-mode draw happens inside the fused reconstruction kernel;
-    ``fused=False`` is the composed bit-exact oracle.  Codec-encoded
-    score states (a quantized round carry) are detected by dtype
-    (``downlink=None``) and sampled straight from the wire words —
-    ``train.local.evaluate`` works on the encoded carry unchanged.  An
-    explicit ``downlink`` must agree with the state's representation
-    (the leaf dtypes determine it uniquely; treating wire words as f32
-    scores would silently clip them all to p=1).
+    ``fused=False`` is the composed bit-exact oracle.  ``carried``
+    names the codec of an encoded score state EXPLICITLY (validated
+    against the leaves; required for the packed uint32-lane codecs,
+    whose dtype is ambiguous); without it the representation is
+    inferred from leaf dtypes, which raises on ambiguity —
+    ``train.local.evaluate(..., carried=tag)`` threads the tag through.
+    An explicit ``downlink`` must agree with the carried representation
+    (treating wire words as f32 scores would silently clip them all to
+    p=1).
     """
-    carried = infer_downlink(state["scores"])
-    if downlink is not None and downlink != carried:
+    from ..comm.downlink import get_codec  # comm sits above core
+
+    resolved = resolve_carried(zspecs, state["scores"], carried)
+    if downlink is not None and get_codec(downlink).name != resolved:
         raise ValueError(
             f"downlink={downlink!r} does not match the state's score "
-            f"representation ({carried!r} by leaf dtype)"
+            f"representation ({resolved!r})"
         )
-    downlink = carried
     program = MaskProgram(zspecs, mode=mode or zspecs.config.mode,
-                          fused=fused, downlink=downlink)
+                          fused=fused, downlink=resolved)
     if program.codec.quantized:
         return program.weights_from_wire(
             state["scores"], state["dense"], as_word(key),

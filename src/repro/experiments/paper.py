@@ -252,12 +252,16 @@ def run_wire_formats(quick: bool = True) -> List[Dict]:
 
 def run_downlink_tradeoff(quick: bool = True) -> List[Dict]:
     """The paper's headline as a tunable protocol knob: the same
-    federated run per registered downlink codec (f32 oracle, u16, u8),
-    reporting final sampled accuracy against metered downlink bytes.
-    The f32 row is the bit-exact baseline; quantized rows trade the
-    2x/4x broadcast reduction for the codec's rounding noise in the
-    round dynamics (the draws themselves stay exactly unbiased at the
-    decoded probability — see comm.downlink)."""
+    federated run per registered downlink codec (f32 oracle, u16, u8,
+    and the packed sub-byte packed4/packed2), reporting final sampled
+    accuracy against metered downlink bytes; then the same run per
+    RATE SCHEDULE (cosine anneal, frontier controller) — the adaptive
+    rows spend fewer cumulative downlink bytes for the same final
+    loss neighborhood as their fixed-width codec.  The f32 row is the
+    bit-exact baseline; quantized rows trade the broadcast reduction
+    for the codec's rounding noise in the round dynamics (the draws
+    themselves stay exactly unbiased at the decoded probability — see
+    comm.downlink)."""
     from ..comm.downlink import codec_names
     from ..core import encode_state
     from ..train import federated_fit
@@ -267,10 +271,17 @@ def run_downlink_tradeoff(quick: bool = True) -> List[Dict]:
     K, E = 4, 10 if quick else 40
     rounds = 10 if quick else 50
     rows = []
-    for name in codec_names(include_aliases=False):
+
+    def one_run(name, schedule="constant"):
         zspecs, state = _setup(SMALL_DIMS, 8, d=10, seed=1)
+        extra = {}
+        if schedule != "constant":
+            extra = {"downlink_schedule": schedule, "schedule_b_min": 2}
+            if schedule == "cosine":
+                extra["schedule_rounds"] = rounds
         cfg = FederatedConfig(num_clients=K, local_steps=E, local_lr=0.5,
-                              aggregate="psum_u32", downlink=name)
+                              aggregate="psum_u32", downlink=name,
+                              **extra)
         state = encode_state(zspecs, cfg, state)
         clients = iid_client_split(ds, K, seed=0)
         stream = client_batch_stream(clients, 64, E, seed=0)
@@ -282,15 +293,27 @@ def run_downlink_tradeoff(quick: bool = True) -> List[Dict]:
                 zs, s, mlp_loss, b, k, cfg)
         )(state, batches, jax.random.PRNGKey(0))
         ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
-                            n_samples=10)
+                            n_samples=10, carried=name)
+        per_round = np.asarray(mets["downlink_bytes_per_client"],
+                               np.float64)
         rep = round_wire_report(zspecs, cfg.aggregate, K, downlink=name)
-        rows.append({
-            "bench": "downlink_tradeoff", "codec": name, "K": K,
-            "rounds": rounds, "final_sampled_acc": ms, "sampled_std": mstd,
+        return {
+            "bench": "downlink_tradeoff", "codec": name,
+            "schedule": schedule, "K": K, "rounds": rounds,
+            "final_sampled_acc": ms, "sampled_std": mstd,
             "final_loss": float(np.asarray(mets["loss"])[-1]),
-            "downlink_bytes_per_client": rep["downlink_bytes_per_client"],
+            # realized (metered) bytes: the scheduled rows charge only
+            # the scheduled width per round, lane padding included
+            "downlink_bytes_per_client": float(per_round[-1]),
+            "downlink_bytes_cumulative": float(per_round.sum()),
             "downlink_vs_f32": rep["downlink_vs_f32"],
-        })
+        }
+
+    for name in codec_names(include_aliases=False):
+        rows.append(one_run(name))
+    for schedule in ("cosine", "frontier"):
+        for name in ("u8", "packed4"):
+            rows.append(one_run(name, schedule))
     return rows
 
 
@@ -345,7 +368,7 @@ def run_heterogeneity(quick: bool = True) -> List[Dict]:
                     weights=jnp.asarray(np.stack([r[1] for r in rr])))
             )(state, batches, jax.random.PRNGKey(0))
             ms, mstd = evaluate(zspecs, state, acc, jax.random.PRNGKey(5),
-                                n_samples=10)
+                                n_samples=10, carried=name)
             rep = round_wire_report(zspecs, cfg.aggregate, K, downlink=name)
             rows.append({
                 "bench": "heterogeneity", "beta": beta, "codec": name,

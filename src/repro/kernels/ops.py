@@ -508,50 +508,68 @@ def reconstruct_batched(spec: QSpec, Z, *, dtype=jnp.float32,
 # bit-exactness contract is exact equality, forward and gradient.
 # ---------------------------------------------------------------------------
 
-def _sample_one(spec: QSpec, p, step, qbits=None):
+def _packed_fusable(spec: QSpec, qbits) -> bool:
+    """Whole lanes per window — the packed in-block unpack needs
+    ``window % (32 // qbits) == 0`` (true for every power-of-two width
+    at the standard windows); other widths fall back to the unpack
+    oracle below."""
+    return spec.window % (32 // qbits) == 0
+
+
+def _sample_one(spec: QSpec, p, step, qbits=None, qpacked=False):
     """The oracle draw for one client: z (n,) f32 in {0,1}.  With
     ``qbits`` the operand is the quantized broadcast words and the draw
-    is the widened-threshold integer compare (``sample_mask_qhash``)."""
+    is the widened-threshold integer compare (``sample_mask_qhash``).
+    With ``qpacked`` the operand is the packed uint32 lane carry
+    (``comm.bitpack``); the oracle unpacks it to per-coordinate words
+    first — this REF path is the one packed impl that materializes the
+    (n,) word slab (it is the exactness anchor, not the fast path)."""
+    if qpacked:
+        from ..comm.bitpack import unpack_words
+
+        p = unpack_words(jnp.asarray(p), spec.n, qbits)
     if qbits is not None:
         return sample_mask_qhash(p, qbits, spec.seed, spec.tensor_id, step)
     return sample_mask_hash(p, spec.seed, spec.tensor_id, step)
 
 
 def _fwd_one_fused(spec: QSpec, p, step, impl, chunks, model_size,
-                   qbits=None):
+                   qbits=None, qpacked=False):
     if model_size is not None and spec.shard_count > 1:
         # shard-local draw: each shard hashes only its own nw_loc
         # windows at GLOBAL coordinates — bit-identical to drawing the
         # replicated (n,) mask and slicing, without materializing it
         from .qz_sharded import sharded_sample_reconstruct
 
-        return sharded_sample_reconstruct(spec, p, step, model_size,
-                                          qbits=qbits)
-    if impl == "pallas":
+        if not qpacked or _packed_fusable(spec, qbits):
+            return sharded_sample_reconstruct(spec, p, step, model_size,
+                                              qbits=qbits, qpacked=qpacked)
+    elif impl == "pallas" and (not qpacked or _packed_fusable(spec, qbits)):
         assert spec.shard_count == 1, "pallas path is single-block layout"
-        return _unmove(spec, _pk.qz_sample_reconstruct_fwd(spec, p, step,
-                                                           qbits=qbits))
-    z = _sample_one(spec, p, step, qbits)
+        return _unmove(spec, _pk.qz_sample_reconstruct_fwd(
+            spec, p, step, qbits=qbits, qpacked=qpacked))
+    z = _sample_one(spec, p, step, qbits, qpacked)
     if chunks > 1:
         return _ref_chunked(spec, z, chunks)
     return reconstruct_ref(spec, z, dtype=jnp.float32)
 
 
 def _fwd_many_fused(spec: QSpec, P, steps, impl, chunks, model_size,
-                    qbits=None):
+                    qbits=None, qpacked=False):
     if model_size is not None and spec.shard_count > 1:
         # shard-local batched draw (see _fwd_one_fused)
         from .qz_sharded import sharded_sample_reconstruct_batched
 
-        return sharded_sample_reconstruct_batched(spec, P, steps,
-                                                  model_size, qbits=qbits)
-    if impl == "pallas":
+        if not qpacked or _packed_fusable(spec, qbits):
+            return sharded_sample_reconstruct_batched(
+                spec, P, steps, model_size, qbits=qbits, qpacked=qpacked)
+    elif impl == "pallas" and (not qpacked or _packed_fusable(spec, qbits)):
         assert spec.shard_count == 1, "pallas path is single-block layout"
         return _unmove_batched(
-            spec, _pk.qz_sample_reconstruct_batched_fwd(spec, P, steps,
-                                                        qbits=qbits)
+            spec, _pk.qz_sample_reconstruct_batched_fwd(
+                spec, P, steps, qbits=qbits, qpacked=qpacked)
         )
-    Z = _sample_one(spec, P, steps, qbits)
+    Z = _sample_one(spec, P, steps, qbits, qpacked)
     if chunks > 1:
         return _ref_chunked_batched(spec, Z, chunks)
     return reconstruct_batched_ref(spec, Z, dtype=jnp.float32)
@@ -624,9 +642,10 @@ _sample_reconstruct_b = _make_sample_reconstruct_op(_fwd_many_fused,
 
 @functools.lru_cache(maxsize=256)
 def _fused_q_cores(spec: QSpec, qbits: int, impl: str, chunks: int,
-                   model_size):
+                   model_size, qpacked: bool = False):
     """vmap-aware QUANTIZED fused forward: the operand is the downlink
-    codec's b-bit probability words and the in-op draw is the
+    codec's b-bit probability words — or, with ``qpacked``, its packed
+    uint32 lane carry (``comm.bitpack``) — and the in-op draw is the
     widened-threshold integer compare.  No custom_vjp — integer wire
     words carry no cotangent (the trainable path decodes first; see
     ``core.zampling.MaskProgram``)."""
@@ -634,20 +653,20 @@ def _fused_q_cores(spec: QSpec, qbits: int, impl: str, chunks: int,
     @jax.custom_batching.custom_vmap
     def core(q, step):
         return _fwd_one_fused(spec, q, step, impl, chunks, model_size,
-                              qbits)
+                              qbits, qpacked)
 
     @core.def_vmap
     def _rule(axis_size, in_batched, Q, steps):
         qb, sb = in_batched
         if not qb and not sb:
             return _fwd_one_fused(spec, Q, steps, impl, chunks, model_size,
-                                  qbits), False
+                                  qbits, qpacked), False
         if not qb:
             Q = jnp.broadcast_to(Q, (axis_size, *Q.shape))
         if not sb:
             steps = jnp.broadcast_to(steps, (axis_size,))
         return _fwd_many_fused(spec, Q, steps, impl, chunks, model_size,
-                               qbits), True
+                               qbits, qpacked), True
 
     return core
 
@@ -655,7 +674,7 @@ def _fused_q_cores(spec: QSpec, qbits: int, impl: str, chunks: int,
 def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
                        chunks: int = 1, impl: Optional[str] = None,
                        model_size: Optional[int] = None, row_sharding=None,
-                       qbits: Optional[int] = None):
+                       qbits: Optional[int] = None, qpacked: bool = False):
     """w = Q·Bern(p) fused: probabilities in, weights out.
 
     ``step`` is the uint32 draw-counter word (``core.sampling``); the
@@ -672,11 +691,20 @@ def sample_reconstruct(spec: QSpec, p, step, *, dtype=jnp.float32,
     the f32 path on the codec's decoded probabilities
     (``sample_mask_qhash``).  That path is gradient-free (wire words
     carry no cotangent); training decodes first.
+
+    ``qpacked``: the operand is the packed uint32 LANE carry of the
+    sub-byte codecs (``comm.downlink.PackedDown`` / ``comm.bitpack``
+    layout, length ``packed_word_len(n, qbits)``): the fused impls
+    stream whole lanes and unpack in-block, so the per-coordinate word
+    slab never materializes (only the ref oracle unpacks up front).
     """
     model_size = _resolve_model_size(model_size, row_sharding)
     impl = impl or _default_impl()
+    if qpacked and qbits is None:
+        raise ValueError("qpacked requires qbits (a packed codec width)")
     if qbits is not None:
-        w = _fused_q_cores(spec, int(qbits), impl, int(chunks), model_size)(
+        w = _fused_q_cores(spec, int(qbits), impl, int(chunks), model_size,
+                           bool(qpacked))(
             jnp.asarray(p).astype(jnp.uint32),
             jnp.asarray(step, jnp.uint32))
         return w.astype(dtype)
@@ -690,18 +718,29 @@ def sample_reconstruct_batched(spec: QSpec, P, steps, *, dtype=jnp.float32,
                                chunks: int = 1, impl: Optional[str] = None,
                                model_size: Optional[int] = None,
                                row_sharding=None,
-                               qbits: Optional[int] = None):
+                               qbits: Optional[int] = None,
+                               qpacked: bool = False):
     """Fused W = Q·Bern(p^(k)) for K stacked clients: P (K, n) probs +
-    steps (K,) draw words -> (K, *spec.shape).  ``qbits`` as
-    ``sample_reconstruct``: P is the (K, n) quantized word slab."""
-    if P.ndim != 2 or P.shape[-1] != spec.n:
-        raise ValueError(f"P has shape {P.shape}, spec expects (K, {spec.n})")
+    steps (K,) draw words -> (K, *spec.shape).  ``qbits``/``qpacked``
+    as ``sample_reconstruct``: P is the (K, n) quantized word slab, or
+    the (K, n/wpl) packed lane slab."""
+    exp_len = spec.n
+    if qpacked:
+        if qbits is None:
+            raise ValueError("qpacked requires qbits (a packed codec width)")
+        from ..comm.bitpack import packed_word_len
+
+        exp_len = packed_word_len(spec.n, int(qbits))
+    if P.ndim != 2 or P.shape[-1] != exp_len:
+        raise ValueError(f"P has shape {P.shape}, spec expects "
+                         f"(K, {exp_len})")
     model_size = _resolve_model_size(model_size, row_sharding)
     impl = impl or _default_impl()
     if qbits is not None:
         W = _fwd_many_fused(spec, jnp.asarray(P).astype(jnp.uint32),
                             jnp.asarray(steps, jnp.uint32), impl,
-                            int(chunks), model_size, int(qbits))
+                            int(chunks), model_size, int(qbits),
+                            bool(qpacked))
         return W.astype(dtype)
     W = _sample_reconstruct_b(spec, P.astype(jnp.float32),
                               jnp.asarray(steps, jnp.uint32), impl,
@@ -868,14 +907,17 @@ def _serve_operand(spec: QSpec, words, qbits):
     return jnp.asarray(words).astype(jnp.uint32)
 
 
-def _serve_edge_weights(spec: QSpec, p, step, rows, qbits):
+def _serve_edge_weights(spec: QSpec, p, step, rows, qbits, qpacked=False):
     """Per-edge streamed weight values at flat rows ``rows`` (..., ).
 
     Regenerates the rows' Q edges, draws each edge's mask bit straight
     from the encoded score words at its global z coordinate, and
     reduces over the degree axis — the same per-row expression as the
     reconstruct kernels, so values are bit-identical to gathering the
-    materialized tensor.
+    materialized tensor.  With ``qpacked``, ``p`` is the packed uint32
+    lane carry and each edge gathers its LANE (``coords // wpl``) then
+    shift/masks its word out — no per-coordinate word slab, the
+    gathered temporaries stay at the edge count.
     """
     rows = jnp.asarray(rows)
     idx = row_indices(spec, rows)  # (..., d) in-window
@@ -884,7 +926,14 @@ def _serve_edge_weights(spec: QSpec, p, step, rows, qbits):
     coords = win[..., None] * spec.window + idx  # global z coords
     u = mask_u32(spec.seed, spec.tensor_id, jnp.asarray(step, jnp.uint32),
                  coords)
-    pw = jnp.take(p, coords.reshape(-1)).reshape(coords.shape)
+    if qpacked:
+        wpl = 32 // qbits
+        lanes = jnp.take(p, (coords // wpl).reshape(-1)).reshape(
+            coords.shape)
+        off = (coords % wpl).astype(jnp.uint32) * jnp.uint32(qbits)
+        pw = (lanes >> off) & np.uint32((1 << qbits) - 1)
+    else:
+        pw = jnp.take(p, coords.reshape(-1)).reshape(coords.shape)
     if qbits is None:
         bits = bernoulli_u32(u, pw)
     else:
@@ -963,14 +1012,14 @@ def _serve_contract_blocks(spec: QSpec, x, row_offset, d_in, d_out, bm,
 
 
 def _serve_contract_chunked(spec: QSpec, p, step, x, row_offset, d_in,
-                            d_out, qbits, bm):
+                            d_out, qbits, bm, qpacked=False):
     """Streaming jnp path: each canonical block regenerates its own
     (bm,) weight values from the encoded words and is consumed by the
     tile dot in place — peak temporaries O(bm·d), no W_g anywhere."""
 
     def w_blk_fn(rows, live, t):
         del t
-        w = _serve_edge_weights(spec, p, step, rows, qbits)
+        w = _serve_edge_weights(spec, p, step, rows, qbits, qpacked)
         return jnp.where(live, w, 0.0)
 
     return _serve_contract_blocks(spec, x, row_offset, d_in, d_out, bm,
@@ -994,7 +1043,7 @@ def _serve_contract_resident(spec: QSpec, W, x, row_offset, d_in, d_out,
 
 
 def _serve_contract_cached(spec: QSpec, p, step, x, row_offset, d_in,
-                           d_out, qbits, bm, pool, slots):
+                           d_out, qbits, bm, pool, slots, qpacked=False):
     """Hot-block-cache path: per canonical block, a ``lax.cond`` on the
     block's cache slot — a resident tile gather on a hit, the streaming
     regeneration on a miss.  Both branches produce the identical (bm,)
@@ -1016,7 +1065,7 @@ def _serve_contract_cached(spec: QSpec, p, step, x, row_offset, d_in,
             return jax.lax.dynamic_index_in_dim(pool, slot, keepdims=False)
 
         def miss(_):
-            w = _serve_edge_weights(spec, p, step, rows, qbits)
+            w = _serve_edge_weights(spec, p, step, rows, qbits, qpacked)
             return jnp.where(live, w, 0.0)
 
         return jax.lax.cond(slot >= 0, hit, miss, None)
@@ -1026,15 +1075,17 @@ def _serve_contract_cached(spec: QSpec, p, step, x, row_offset, d_in,
 
 
 def _serve_contract_ref(spec: QSpec, words, step, x, row_offset, d_in,
-                        d_out, qbits, bm):
+                        d_out, qbits, bm, qpacked=False):
     """Reconstruct-then-matmul oracle: materializes the full leaf, then
     contracts it through the resident (load-mode) path."""
-    W = sample_reconstruct(spec, words, step, qbits=qbits, impl="ref")
+    W = sample_reconstruct(spec, words, step, qbits=qbits, qpacked=qpacked,
+                           impl="ref")
     return _serve_contract_resident(spec, W, x, row_offset, d_in, d_out,
                                     bm)
 
 
-def _serve_contract(spec, words, step, x, group, qbits, impl, bm):
+def _serve_contract(spec, words, step, x, group, qbits, impl, bm,
+                    qpacked=False):
     groups, d_in, d_out = serve_group_dims(spec)
     if not 0 <= group < groups:
         raise ValueError(f"group {group} out of range [0, {groups})")
@@ -1046,26 +1097,28 @@ def _serve_contract(spec, words, step, x, group, qbits, impl, bm):
     row_offset = group * d_in * d_out
     if impl == "ref":
         return _serve_contract_ref(spec, words, step, x, row_offset,
-                                   d_in, d_out, qbits, bm)
+                                   d_in, d_out, qbits, bm, qpacked)
     p = _serve_operand(spec, words, qbits)
-    if impl == "pallas":
+    if impl == "pallas" and (not qpacked or _packed_fusable(spec, qbits)):
         from .qz_decode import qz_sample_matmul, qz_sample_matvec
 
         fn = qz_sample_matvec if x.ndim == 1 else qz_sample_matmul
         return fn(spec, p, step, x, row_offset=row_offset, d_in=d_in,
-                  d_out=d_out, qbits=qbits, bm=bm)
+                  d_out=d_out, qbits=qbits, qpacked=qpacked, bm=bm)
     return _serve_contract_chunked(spec, p, step, x, row_offset, d_in,
-                                   d_out, qbits, bm)
+                                   d_out, qbits, bm, qpacked)
 
 
 def serve_matvec(spec: QSpec, words, step, x, *, group: int = 0,
-                 qbits: Optional[int] = None, impl: Optional[str] = None,
-                 bm: int = SERVE_BM):
+                 qbits: Optional[int] = None, qpacked: bool = False,
+                 impl: Optional[str] = None, bm: int = SERVE_BM):
     """Streamed y = x @ W_g: encoded scores + x (d_in,) -> (d_out,).
 
     ``words``: the serve-resident score state — f32 scores (clipped to
-    probabilities in-op) or the downlink codec's uint words with
-    ``qbits`` set.  ``step`` pins the mask draw; ``group`` selects the
+    probabilities in-op), the downlink codec's uint words with
+    ``qbits`` set, or the packed uint32 lane carry with ``qpacked``
+    (sub-byte codecs; the streamed impls gather lanes and shift/mask
+    in place).  ``step`` pins the mask draw; ``group`` selects the
     stacked layer.  All impls contract through the canonical blocked
     tree (section comment), so ref/chunked/pallas agree bit-for-bit;
     'ref' IS reconstruct-then-matmul and anchors the exactness tests.
@@ -1079,12 +1132,12 @@ def serve_matvec(spec: QSpec, words, step, x, *, group: int = 0,
     if x.ndim != 1:
         raise ValueError(f"serve_matvec takes x (d_in,), got {x.shape}")
     return _serve_contract(spec, words, step, x, int(group), qbits, impl,
-                           int(bm))
+                           int(bm), bool(qpacked))
 
 
 def serve_matmul(spec: QSpec, words, step, X, *, group: int = 0,
-                 qbits: Optional[int] = None, impl: Optional[str] = None,
-                 bm: int = SERVE_BM):
+                 qbits: Optional[int] = None, qpacked: bool = False,
+                 impl: Optional[str] = None, bm: int = SERVE_BM):
     """Streamed Y = X @ W_g for a (B, d_in) activation batch."""
     impl = impl or _default_serve_impl()
     if impl not in _VALID_SERVE_IMPLS:
@@ -1095,12 +1148,12 @@ def serve_matmul(spec: QSpec, words, step, X, *, group: int = 0,
     if X.ndim != 2:
         raise ValueError(f"serve_matmul takes X (B, d_in), got {X.shape}")
     return _serve_contract(spec, words, step, X, int(group), qbits, impl,
-                           int(bm))
+                           int(bm), bool(qpacked))
 
 
 def serve_cached_matmul(spec: QSpec, words, step, X, pool, slots, *,
                         group: int = 0, qbits: Optional[int] = None,
-                        bm: int = SERVE_BM):
+                        qpacked: bool = False, bm: int = SERVE_BM):
     """Streamed Y = X @ W_g with the hot-block cache in the loop.
 
     ``pool`` (S, bm) f32 and ``slots`` (nblk,) int32 come from
@@ -1125,11 +1178,12 @@ def serve_cached_matmul(spec: QSpec, words, step, X, pool, slots, *,
     p = _serve_operand(spec, words, qbits)
     return _serve_contract_cached(spec, p, step, X, group * d_in * d_out,
                                   d_in, d_out, qbits, int(bm), pool,
-                                  slots)
+                                  slots, bool(qpacked))
 
 
 def serve_fill_tiles(spec: QSpec, words, step, groups_idx, blocks, *,
-                     qbits: Optional[int] = None, bm: int = SERVE_BM):
+                     qbits: Optional[int] = None, qpacked: bool = False,
+                     bm: int = SERVE_BM):
     """Batched tile fill: materialize T canonical blocks' weight values.
 
     ``groups_idx`` / ``blocks`` are (T,) int32 (group, canonical block
@@ -1162,7 +1216,7 @@ def serve_fill_tiles(spec: QSpec, words, step, groups_idx, blocks, *,
             & ((j * bm)[:, None] + lane[None, :] < rpw)
             & (rows < spec.m))
     p = _serve_operand(spec, words, qbits)
-    w = _serve_edge_weights(spec, p, step, rows, qbits)
+    w = _serve_edge_weights(spec, p, step, rows, qbits, bool(qpacked))
     return jnp.where(live, w, 0.0)
 
 
@@ -1211,7 +1265,7 @@ def serve_resident_matmul(spec: QSpec, W, X, *, group: int = 0,
 
 
 def serve_embed_rows(spec: QSpec, words, step, tokens, *,
-                     qbits: Optional[int] = None):
+                     qbits: Optional[int] = None, qpacked: bool = False):
     """Streamed embedding-row gather: tokens (...) int -> (..., d_out).
 
     Row t of a 2-D (vocab, d_model) leaf is the contiguous flat-row
@@ -1229,4 +1283,4 @@ def serve_embed_rows(spec: QSpec, words, step, tokens, *,
     p = _serve_operand(spec, words, qbits)
     tokens = jnp.asarray(tokens, jnp.int32)
     rows = tokens[..., None] * d_out + jnp.arange(d_out, dtype=jnp.int32)
-    return _serve_edge_weights(spec, p, step, rows, qbits)
+    return _serve_edge_weights(spec, p, step, rows, qbits, bool(qpacked))

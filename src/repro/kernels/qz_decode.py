@@ -67,16 +67,21 @@ from ..core.hashrng import bernoulli_u32
 from ..core.qspec import QSpec, row_indices, row_values
 from ..core.sampling import mask_u32, quant_threshold_u24
 from .ops import SERVE_BM, serve_block_grid, serve_tile_rows
-from .qz_reconstruct import _onehot
+from .qz_reconstruct import _lanes_per_window, _onehot, _unpack_window
 
 
-def _decode_window_mask(spec: QSpec, step, p_win, w0: int, qbits):
+def _decode_window_mask(spec: QSpec, step, p_win, w0: int, qbits,
+                        qpacked=False):
     """Draw grid window ``w0 + program_id(0)``'s z-bits in-block.
 
     Same draw as ``qz_reconstruct._window_mask`` but with the window
     base offset: the decode grid only spans the windows overlapping
-    one group's rows, so the global window id is ``w0 + i``.
+    one group's rows, so the global window id is ``w0 + i``.  With
+    ``qpacked`` the operand window is the packed uint32 lanes of the
+    sub-byte codecs, unpacked in-block.
     """
+    if qpacked:
+        p_win = _unpack_window(spec, p_win, qbits)
     i = pl.program_id(0)
     coords = (w0 + i) * spec.window + jax.lax.iota(jnp.int32, spec.window)
     u = mask_u32(spec.seed, spec.tensor_id, step, coords)
@@ -87,7 +92,8 @@ def _decode_window_mask(spec: QSpec, step, p_win, w0: int, qbits):
 
 
 def _decode_block(p_ref, step_ref, *, spec: QSpec, bm: int, w0: int,
-                  row_offset: int, d_in: int, d_out: int, qbits):
+                  row_offset: int, d_in: int, d_out: int, qbits,
+                  qpacked=False):
     """Shared front half of both decode kernels.
 
     Regenerates this block's weight values and scatters them into the
@@ -110,7 +116,8 @@ def _decode_block(p_ref, step_ref, *, spec: QSpec, bm: int, w0: int,
     )
     idx = row_indices(spec, rows)  # (bm, d) in-window
     vals = row_values(spec, rows, dtype=jnp.float32)
-    zwin = _decode_window_mask(spec, step_ref[0], p_ref[...], w0, qbits)
+    zwin = _decode_window_mask(spec, step_ref[0], p_ref[...], w0, qbits,
+                               qpacked=qpacked)
     zsel = jnp.dot(_onehot(idx, spec.window), zwin,
                    preferred_element_type=jnp.float32)
     w_blk = jnp.where(live,
@@ -134,14 +141,15 @@ def _decode_block(p_ref, step_ref, *, spec: QSpec, bm: int, w0: int,
 
 
 def _mv_kernel(p_ref, step_ref, x_ref, y_ref, *, spec: QSpec, bm: int,
-               w0: int, row_offset: int, d_in: int, d_out: int, qbits):
+               w0: int, row_offset: int, d_in: int, d_out: int, qbits,
+               qpacked=False):
     @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
     tile, oh_x = _decode_block(
         p_ref, step_ref, spec=spec, bm=bm, w0=w0, row_offset=row_offset,
-        d_in=d_in, d_out=d_out, qbits=qbits,
+        d_in=d_in, d_out=d_out, qbits=qbits, qpacked=qpacked,
     )
     xseg = jnp.dot(oh_x, x_ref[...].astype(jnp.float32),
                    preferred_element_type=jnp.float32)  # (ni,)
@@ -150,14 +158,15 @@ def _mv_kernel(p_ref, step_ref, x_ref, y_ref, *, spec: QSpec, bm: int,
 
 
 def _mm_kernel(p_ref, step_ref, x_ref, y_ref, *, spec: QSpec, bm: int,
-               w0: int, row_offset: int, d_in: int, d_out: int, qbits):
+               w0: int, row_offset: int, d_in: int, d_out: int, qbits,
+               qpacked=False):
     @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
     tile, oh_x = _decode_block(
         p_ref, step_ref, spec=spec, bm=bm, w0=w0, row_offset=row_offset,
-        d_in=d_in, d_out=d_out, qbits=qbits,
+        d_in=d_in, d_out=d_out, qbits=qbits, qpacked=qpacked,
     )
     xseg = jnp.dot(x_ref[...].astype(jnp.float32), oh_x.T,
                    preferred_element_type=jnp.float32)  # (B, ni)
@@ -179,27 +188,29 @@ def _check_layout(spec: QSpec, row_offset: int, d_in: int, d_out: int):
 
 
 def qz_sample_matvec(spec: QSpec, p, step, x, *, row_offset: int = 0,
-                     d_in: int, d_out: int, qbits=None,
+                     d_in: int, d_out: int, qbits=None, qpacked=False,
                      bm: int = SERVE_BM, interpret: bool = True):
     """Fused serve matvec: encoded scores + x (d_in,) -> y (d_out,) f32.
 
     ``p``: the (n,) score operand — CLIPPED f32 probabilities
-    (``qbits=None``) or the codec's uint words (``qbits=b``).  ``step``
+    (``qbits=None``), the codec's uint words (``qbits=b``), or with
+    ``qpacked`` the (n/wpl,) packed uint32 lane carry.  ``step``
     is the uint32 draw word pinning the mask draw.  Bit-identical to
     ``ops.serve_matvec`` on every impl (the canonical tree) for rows
     [row_offset, row_offset + d_in*d_out).
     """
     _check_layout(spec, row_offset, d_in, d_out)
     w0, nblk, bpw = serve_block_grid(spec, bm, row_offset, d_in * d_out)
+    op_len = _lanes_per_window(spec, qbits) if qpacked else spec.window
     operand = (p.astype(jnp.float32) if qbits is None
                else jnp.asarray(p).astype(jnp.uint32))
     return pl.pallas_call(
         functools.partial(_mv_kernel, spec=spec, bm=bm, w0=w0,
                           row_offset=row_offset, d_in=d_in, d_out=d_out,
-                          qbits=qbits),
+                          qbits=qbits, qpacked=qpacked),
         grid=(nblk // bpw, bpw),
         in_specs=[
-            pl.BlockSpec((spec.window,), lambda i, j: (w0 + i,)),
+            pl.BlockSpec((op_len,), lambda i, j: (w0 + i,)),
             pl.BlockSpec((1,), lambda i, j: (0,)),
             pl.BlockSpec((d_in,), lambda i, j: (0,)),
         ],
@@ -211,7 +222,7 @@ def qz_sample_matvec(spec: QSpec, p, step, x, *, row_offset: int = 0,
 
 
 def qz_sample_matmul(spec: QSpec, p, step, X, *, row_offset: int = 0,
-                     d_in: int, d_out: int, qbits=None,
+                     d_in: int, d_out: int, qbits=None, qpacked=False,
                      bm: int = SERVE_BM, interpret: bool = True):
     """Fused serve matmul: encoded scores + X (B, d_in) -> (B, d_out).
 
@@ -222,15 +233,16 @@ def qz_sample_matmul(spec: QSpec, p, step, X, *, row_offset: int = 0,
     _check_layout(spec, row_offset, d_in, d_out)
     w0, nblk, bpw = serve_block_grid(spec, bm, row_offset, d_in * d_out)
     B = X.shape[0]
+    op_len = _lanes_per_window(spec, qbits) if qpacked else spec.window
     operand = (p.astype(jnp.float32) if qbits is None
                else jnp.asarray(p).astype(jnp.uint32))
     return pl.pallas_call(
         functools.partial(_mm_kernel, spec=spec, bm=bm, w0=w0,
                           row_offset=row_offset, d_in=d_in, d_out=d_out,
-                          qbits=qbits),
+                          qbits=qbits, qpacked=qpacked),
         grid=(nblk // bpw, bpw),
         in_specs=[
-            pl.BlockSpec((spec.window,), lambda i, j: (w0 + i,)),
+            pl.BlockSpec((op_len,), lambda i, j: (w0 + i,)),
             pl.BlockSpec((1,), lambda i, j: (0,)),
             pl.BlockSpec((B, d_in), lambda i, j: (0, 0)),
         ],

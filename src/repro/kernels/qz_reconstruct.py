@@ -413,7 +413,38 @@ def qz_reconstruct_batched_bwd_plan(spec: QSpec, grad_W, *,
 # The mask z is a transient in-block value, never an HBM array.
 # ---------------------------------------------------------------------------
 
-def _window_mask(spec: QSpec, step, p_win, qbits=None):
+def _lanes_per_window(spec: QSpec, qbits: int) -> int:
+    """Packed-operand block length: uint32 lanes per z-window.  The
+    packed fused path needs whole lanes per window (lane i covers
+    coordinates [i·wpl, (i+1)·wpl)), i.e. ``window % floor(32/b) == 0``
+    — true for every power-of-two b at the standard window sizes;
+    ``ops`` falls back to the unpack oracle otherwise."""
+    wpl = 32 // qbits
+    if spec.window % wpl != 0:
+        raise ValueError(
+            f"packed fused kernel needs window % (32//qbits) == 0; got "
+            f"window={spec.window}, qbits={qbits} (wpl={wpl})"
+        )
+    return spec.window // wpl
+
+
+def _unpack_window(spec: QSpec, lanes, qbits: int):
+    """In-block lane unpack: (window/wpl,) [or (window/wpl, K)] uint32
+    lanes -> (window,) [or (window, K)] b-bit words — a VMEM-local
+    shift/mask, so the per-coordinate word array only ever exists as
+    this window-sized transient, never as an (n,) slab in HBM
+    (jaxpr-asserted in tests/test_packed_downlink.py)."""
+    wpl = 32 // qbits
+    mask = np.uint32((1 << qbits) - 1)
+    sh = np.uint32(qbits) * jax.lax.iota(jnp.uint32, wpl)
+    if lanes.ndim == 2:  # (window/wpl, K) lane slab
+        words = (lanes[:, None, :] >> sh[None, :, None]) & mask
+        return words.reshape(spec.window, lanes.shape[-1])
+    words = (lanes[:, None] >> sh[None, :]) & mask
+    return words.reshape(spec.window)
+
+
+def _window_mask(spec: QSpec, step, p_win, qbits=None, qpacked=False):
     """Draw this grid step's z-window in-block from the hash RNG.
 
     ``step`` is the traced uint32 draw-counter word; coordinates are
@@ -425,8 +456,13 @@ def _window_mask(spec: QSpec, step, p_win, qbits=None):
     and the draw is the widened-threshold integer compare
     ``(u >> 8) < quant_threshold_u24(q)`` — pure uint32 shifts and a
     constant divide, no dequantized f32 probabilities even in-block —
-    bit-identical to the oracle's ``sample_mask_qhash``.
+    bit-identical to the oracle's ``sample_mask_qhash``.  With
+    ``qpacked`` the operand window is the packed uint32 LANES of the
+    sub-byte codecs (``comm.bitpack.pack_words`` layout) and the words
+    are unpacked in-block first (``_unpack_window``).
     """
+    if qpacked:
+        p_win = _unpack_window(spec, p_win, qbits)
     i = pl.program_id(0)
     coords = i * spec.window + jax.lax.iota(jnp.int32, spec.window)
     if p_win.ndim == 2:  # (window, K) p-slab: one stream per client
@@ -441,32 +477,39 @@ def _window_mask(spec: QSpec, step, p_win, qbits=None):
 
 
 def _sfwd_kernel(p_ref, step_ref, w_ref, *, spec: QSpec, bm: int, bpw: int,
-                 qbits=None):
+                 qbits=None, qpacked=False):
     idx, vals = _block_rows(spec, bm, masked=False)
-    zwin = _window_mask(spec, step_ref[0], p_ref[...], qbits=qbits)
+    zwin = _window_mask(spec, step_ref[0], p_ref[...], qbits=qbits,
+                        qpacked=qpacked)
     zsel = jnp.dot(_onehot(idx, spec.window), zwin,
                    preferred_element_type=jnp.float32)
     w_ref[...] = jnp.sum(vals * zsel.reshape(bm, spec.d), axis=-1)
 
 
 def qz_sample_reconstruct_fwd(spec: QSpec, p, step, *, bm: int = DEFAULT_BM,
-                              interpret: bool = True, qbits=None):
+                              interpret: bool = True, qbits=None,
+                              qpacked=False):
     """Fused Pallas forward: p (n,) f32 + step word -> w (m,) f32 (flat).
 
     With ``qbits`` the operand is the quantized broadcast (b-bit
     probability words, shipped into the kernel as uint32) and the
     in-block draw is the widened-threshold integer compare — the
-    dequantized f32 score vector never exists, in HBM or VMEM.
+    dequantized f32 score vector never exists, in HBM or VMEM.  With
+    ``qpacked`` the operand is the (n/wpl,) packed uint32 LANE carry of
+    the sub-byte codecs and each grid step streams ``window/wpl`` whole
+    lanes, unpacking in-block — the per-coordinate word array never
+    materializes outside a window-sized VMEM transient.
     """
     nw, bpw, m_grid = _grid_dims(spec, bm)
+    op_len = _lanes_per_window(spec, qbits) if qpacked else spec.window
     operand = (p.astype(jnp.float32) if qbits is None
                else jnp.asarray(p).astype(jnp.uint32))
     out = pl.pallas_call(
         functools.partial(_sfwd_kernel, spec=spec, bm=bm, bpw=bpw,
-                          qbits=qbits),
+                          qbits=qbits, qpacked=qpacked),
         grid=(nw, bpw),
         in_specs=[
-            pl.BlockSpec((spec.window,), lambda i, j: (i,)),
+            pl.BlockSpec((op_len,), lambda i, j: (i,)),
             pl.BlockSpec((1,), lambda i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((bm,), lambda i, j: (i * bpw + j,)),
@@ -479,10 +522,10 @@ def qz_sample_reconstruct_fwd(spec: QSpec, p, step, *, bm: int = DEFAULT_BM,
 
 
 def _sbfwd_kernel(pt_ref, steps_ref, w_ref, *, spec: QSpec, bm: int,
-                  nclients: int, qbits=None):
+                  nclients: int, qbits=None, qpacked=False):
     idx, vals = _block_rows(spec, bm, masked=False)
     slab = _window_mask(spec, steps_ref[...], pt_ref[...],
-                        qbits=qbits)  # (window, K)
+                        qbits=qbits, qpacked=qpacked)  # (window, K)
     zsel = jnp.dot(_onehot(idx, spec.window), slab,
                    preferred_element_type=jnp.float32)
     w_ref[...] = jnp.sum(
@@ -492,24 +535,27 @@ def _sbfwd_kernel(pt_ref, steps_ref, w_ref, *, spec: QSpec, bm: int,
 
 def qz_sample_reconstruct_batched_fwd(spec: QSpec, P, steps, *,
                                       bm: int = DEFAULT_BM,
-                                      interpret: bool = True, qbits=None):
+                                      interpret: bool = True, qbits=None,
+                                      qpacked=False):
     """Fused batched forward: P (K, n) probs + steps (K,) -> W (K, m).
 
-    ``qbits``: as ``qz_sample_reconstruct_fwd`` — P is the (K, n)
-    quantized word slab and the draw stays integer in-block.
+    ``qbits``/``qpacked``: as ``qz_sample_reconstruct_fwd`` — P is the
+    (K, n) quantized word slab (or the (K, n/wpl) packed lane slab) and
+    the draw stays integer in-block.
     """
     nclients = P.shape[0]
     nw, bpw, m_grid = _grid_dims(spec, bm)
+    op_len = _lanes_per_window(spec, qbits) if qpacked else spec.window
     if qbits is None:
         pt = P.astype(jnp.float32).T  # (n, K) — window-major p-slabs
     else:
         pt = jnp.asarray(P).astype(jnp.uint32).T
     out = pl.pallas_call(
         functools.partial(_sbfwd_kernel, spec=spec, bm=bm,
-                          nclients=nclients, qbits=qbits),
+                          nclients=nclients, qbits=qbits, qpacked=qpacked),
         grid=(nw, bpw),
         in_specs=[
-            pl.BlockSpec((spec.window, nclients), lambda i, j: (i, 0)),
+            pl.BlockSpec((op_len, nclients), lambda i, j: (i, 0)),
             pl.BlockSpec((nclients,), lambda i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, nclients), lambda i, j: (i * bpw + j, 0)),

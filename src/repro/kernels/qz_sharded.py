@@ -173,7 +173,7 @@ def sharded_reconstruct_batched(spec: QSpec, Z, ms: int):
 # Fused shard-local draw: each shard hashes ONLY its own nw_loc windows.
 # ---------------------------------------------------------------------------
 
-def _local_draw(spec: QSpec, pl, step, qbits):
+def _local_draw(spec: QSpec, pl, step, qbits, qpacked=False):
     """This shard's mask bits, drawn from the hash stream at GLOBAL
     coordinates.
 
@@ -182,14 +182,21 @@ def _local_draw(spec: QSpec, pl, step, qbits):
     draw its own contiguous slice ``[sid·n_loc, (sid+1)·n_loc)``
     (n_loc = nw_loc·window) without the replicated (n,) mask ever
     existing: the bits equal the global draw's slice EXACTLY.  ``pl``
-    is the shard's probability slice — f32, or b-bit wire words with
+    is the shard's probability slice — f32, b-bit wire words with
     ``qbits`` (widened-threshold integer compare, as
-    ``core.sampling.sample_mask_qhash``).  ``step`` broadcasts against
-    ``pl``'s leading axes (scalar, or (K,) for the batched op).
+    ``core.sampling.sample_mask_qhash``), or with ``qpacked`` the
+    shard's (n_loc/wpl,) slice of the packed uint32 lane carry
+    (``comm.bitpack`` layout — lanes shard cleanly because
+    ``wpl | window``), unpacked to shard-local words here.  ``step``
+    broadcasts against ``pl``'s leading axes (scalar, or (K,) for the
+    batched op).
     """
+    from ..comm.bitpack import unpack_words
     from ..core.sampling import bernoulli_u32, mask_u32, quant_threshold_u24
 
     n_loc = spec.nw_loc * spec.window
+    if qpacked:
+        pl = unpack_words(pl, n_loc, qbits)
     sid = jax.lax.axis_index(AXIS).astype(jnp.uint32)
     coords = sid * jnp.uint32(n_loc) + jnp.arange(n_loc, dtype=jnp.uint32)
     step = jnp.asarray(step, jnp.uint32)
@@ -200,10 +207,12 @@ def _local_draw(spec: QSpec, pl, step, qbits):
     return bernoulli_u32(u, pl)
 
 
-def sharded_sample_reconstruct(spec: QSpec, p, step, ms: int, qbits=None):
+def sharded_sample_reconstruct(spec: QSpec, p, step, ms: int, qbits=None,
+                               qpacked=False):
     """Fused w = Q·Bern(p) with the DRAW inside the shard_map body.
 
-    ``p``: (n,) probabilities (or quantized words with ``qbits``),
+    ``p``: (n,) probabilities (or quantized words with ``qbits``; or
+    the (n/wpl,) packed lane carry with ``qpacked``),
     sharded/shardable P('model'); ``step``: replicated uint32 draw
     word.  Each shard draws only its own ``nw_loc`` windows from the
     hash stream at global coordinates (``_local_draw``) and contracts
@@ -212,12 +221,17 @@ def sharded_sample_reconstruct(spec: QSpec, p, step, ms: int, qbits=None):
     ``sharded_reconstruct(spec, sample_mask_hash(p, ...), ms)``.
     """
     _check(spec, ms)
+    if qpacked and spec.window % (32 // qbits) != 0:
+        raise ValueError(
+            f"packed sharded draw needs window % (32//qbits) == 0; got "
+            f"window={spec.window}, qbits={qbits}"
+        )
     a = spec.major_axis
     loc_moved = (spec.shape[a] // ms,
                  *spec.shape[:a], *spec.shape[a + 1:])
 
     def local(pl, st):
-        zf = _local_draw(spec, pl, st, qbits)
+        zf = _local_draw(spec, pl, st, qbits, qpacked=qpacked)
         nc = _num_chunks(spec)
         rpc = -(-spec.m_pad_loc // nc)
 
@@ -234,21 +248,27 @@ def sharded_sample_reconstruct(spec: QSpec, p, step, ms: int, qbits=None):
 
 
 def sharded_sample_reconstruct_batched(spec: QSpec, Pr, steps, ms: int,
-                                       qbits=None):
+                                       qbits=None, qpacked=False):
     """Fused batched W = Q·Bern(p^(k)): ``Pr`` (K, n) sharded
-    P(None, 'model'), ``steps`` (K,) replicated draw words.  One
+    P(None, 'model') — or (K, n/wpl) packed lanes with ``qpacked`` —
+    ``steps`` (K,) replicated draw words.  One
     in-body draw of the (K, n_loc) local mask slab (global-coordinate
     hash — bit-identical to the replicated draw's slice), one chunk
     index/value generation shared by all K clients, zero collectives.
     """
     _check(spec, ms)
+    if qpacked and spec.window % (32 // qbits) != 0:
+        raise ValueError(
+            f"packed sharded draw needs window % (32//qbits) == 0; got "
+            f"window={spec.window}, qbits={qbits}"
+        )
     a = spec.major_axis
     loc_moved = (spec.shape[a] // ms,
                  *spec.shape[:a], *spec.shape[a + 1:])
 
     def local(pl, st):  # (K, n_loc), (K,)
         k = pl.shape[0]
-        zf = _local_draw(spec, pl, st, qbits)
+        zf = _local_draw(spec, pl, st, qbits, qpacked=qpacked)
         nc = _num_chunks(spec, k)
         rpc = -(-spec.m_pad_loc // nc)
 

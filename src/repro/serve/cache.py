@@ -120,6 +120,7 @@ class HotBlockCache:
         self.tile_bytes = 4 * self.bm
         self.budget_bytes = int(budget_bytes)
         self.qbits = sstate.qbits
+        self.qpacked = sstate.qpacked
         # cacheable leaves: every zampled matmul leaf.  'embed' streams
         # through the row-gather path (serve_embed_rows), which never
         # runs the blocked contraction — nothing to cache there.
@@ -269,7 +270,8 @@ class HotBlockCache:
             ts = jnp.asarray([e[2] for e in entries], jnp.int32)
             tiles = ops.serve_fill_tiles(grid.spec, sstate.words[path],
                                          sstate.step, gs, ts,
-                                         qbits=self.qbits, bm=self.bm)
+                                         qbits=self.qbits,
+                                         qpacked=self.qpacked, bm=self.bm)
             self._pool = self._pool.at[ks].set(tiles)
         if filled:
             self.counters["fills"] += filled

@@ -202,6 +202,7 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
     L = cfg.n_layers
     specs = sstate.zspecs.specs
     qbits = sstate.qbits
+    qpacked = sstate.qpacked
 
     for path in specs:
         leaf = path.rsplit("/", 1)[-1]
@@ -242,10 +243,11 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
                                            arrays["step"], x2d,
                                            arrays["pool"],
                                            arrays["slots"][path][layer],
-                                           group=layer, qbits=qbits)
+                                           group=layer, qbits=qbits,
+                                           qpacked=qpacked)
         return ops.serve_matmul(spec, arrays["words"][path],
                                 arrays["step"], x2d, group=layer,
-                                qbits=qbits, impl=impl)
+                                qbits=qbits, qpacked=qpacked, impl=impl)
 
     def embed_rows(arrays, tokens):
         spec = specs.get("embed")
@@ -254,7 +256,8 @@ def build_serve_engine(model: Model, sstate: ServeState, *,
         if mode == "load":
             return jnp.take(arrays["weights"]["embed"], tokens, axis=0)
         return ops.serve_embed_rows(spec, arrays["words"]["embed"],
-                                    arrays["step"], tokens, qbits=qbits)
+                                    arrays["step"], tokens, qbits=qbits,
+                                    qpacked=qpacked)
 
     def dlayer(arrays, path, layer):
         return arrays["dense"][path][layer]

@@ -118,16 +118,21 @@ def make_delta(old: ServeState, new: ServeState) -> ServeDelta:
     )
 
 
-def _drawn_bits(spec, words, step, qbits):
+def _drawn_bits(spec, words, step, qbits, qpacked=False):
     """The (n,) drawn mask bits of one leaf under the pinned draw word
     — the exact draw expressions of ``kernels.ops._serve_edge_weights``
-    evaluated per z coordinate."""
+    evaluated per z coordinate (packed lanes unpack to per-coordinate
+    words first)."""
     coords = jnp.arange(spec.n, dtype=jnp.uint32)
     u = mask_u32(spec.seed, spec.tensor_id, jnp.asarray(step, jnp.uint32),
                  coords)
     if qbits is None:
         p = jnp.clip(jnp.asarray(words).astype(jnp.float32), 0.0, 1.0)
         return bernoulli_u32(u, p).astype(bool)
+    if qpacked:
+        from ..comm.bitpack import unpack_words
+
+        words = unpack_words(jnp.asarray(words), spec.n, qbits)
     thr = quant_threshold_u24(jnp.asarray(words).astype(jnp.uint32), qbits)
     return (u >> np.uint32(8)) < thr
 
@@ -148,13 +153,15 @@ def delta_flipped_windows(sstate: ServeState,
             "— invalidate the whole cache"
         )
     qbits = sstate.qbits
+    qpacked = sstate.qpacked
     out = {}
     for path, patch in delta.words.items():
         spec = sstate.zspecs.specs[path]
         old_w = sstate.words[path]
         new_w = apply_word_delta(old_w, patch)
-        flipped = (_drawn_bits(spec, old_w, sstate.step, qbits)
-                   != _drawn_bits(spec, new_w, sstate.step, qbits))
+        flipped = (_drawn_bits(spec, old_w, sstate.step, qbits, qpacked)
+                   != _drawn_bits(spec, new_w, sstate.step, qbits,
+                                  qpacked))
         out[path] = flipped.reshape(spec.num_windows, spec.window).any(1)
     return out
 

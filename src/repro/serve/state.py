@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from ..comm.downlink import get_codec
 from ..core.sampling import as_word, clip_probs
-from ..core.zampling import ZamplingSpecs, infer_downlink
+from ..core.zampling import ZamplingSpecs, infer_downlink, validate_carried
 
 
 @dataclass(frozen=True)
@@ -52,6 +52,12 @@ class ServeState:
     def qbits(self) -> Optional[int]:
         codec = get_codec(self.codec)
         return codec.bits if codec.quantized else None
+
+    @property
+    def qpacked(self) -> bool:
+        """True when the words are uint32 lanes of a packed sub-byte
+        codec (the contraction kernels unpack in-block)."""
+        return bool(get_codec(self.codec).packed)
 
     def arrays(self) -> Dict[str, Any]:
         """The jit-visible half, as a plain dict pytree."""
@@ -96,24 +102,15 @@ def make_serve_state(zspecs: ZamplingSpecs, state, key, *,
     checkpoint's tag (``checkpoint.checkpoint_downlink``) when serving
     from a saved carry, instead of letting ``infer_downlink`` sniff
     dtypes (a uint8 leaf is ambiguous: wire words and token ids look
-    alike).  Validated against the leaves' wire width; default falls
-    back to sniffing for in-process states, whose provenance is known.
+    alike, and the packed sub-byte codecs ALL share the uint32 lane
+    carrier — only the tag can tell ``packed4`` from ``packed2``).
+    Validated against the leaves' full wire signature (dtype + lane
+    count, ``core.zampling.validate_carried``); default falls back to
+    sniffing for in-process states, whose provenance is known —
+    sniffing raises on the ambiguous uint32 carrier.
     """
     if carried is not None:
-        codec = get_codec(carried)
-        for path, leaf in state["scores"].items():
-            dt = jnp.asarray(leaf).dtype
-            if codec.quantized:
-                ok = (jnp.issubdtype(dt, jnp.unsignedinteger)
-                      and dt.itemsize * 8 == codec.bits)
-            else:
-                ok = jnp.issubdtype(dt, jnp.floating)
-            if not ok:
-                raise ValueError(
-                    f"score leaf {path!r} has dtype {dt}, which cannot "
-                    f"carry the tagged codec {codec.name!r}"
-                )
-        carried = codec.name
+        carried = validate_carried(zspecs, state["scores"], carried)
     else:
         carried = infer_downlink(state["scores"])
     target = downlink or carried
@@ -147,11 +144,13 @@ def reconstruct_resident(sstate: ServeState,
     from ..kernels import ops  # kernels sit above comm/core
 
     qbits = sstate.qbits
+    qpacked = sstate.qpacked
     out = {}
     for path, spec in sstate.zspecs.specs.items():
         w = sstate.words[path]
         operand = w if qbits is not None else clip_probs(
             jnp.asarray(w).astype(jnp.float32))
         out[path] = ops.sample_reconstruct(spec, operand, sstate.step,
-                                           qbits=qbits, impl=impl)
+                                           qbits=qbits, qpacked=qpacked,
+                                           impl=impl)
     return out

@@ -40,6 +40,16 @@ drivers.  The encode dither word is derived from (round key,
 round_index) only, so the fit ≡ R-sequential-rounds equivalence holds
 per codec.
 
+Downlink rate schedules (``FederatedConfig.downlink_schedule``): the
+per-round, per-tensor width vector is a TRACED function of the scanned
+round counter (``cosine``) or a carried ``state["downlink_b"]`` leaf
+(``frontier`` — seeded by ``encode_state``, updated by the round body
+from the measured draw-word flip fraction), so an R-round scheduled
+fit still compiles ONCE — no per-width recompilation.  ``constant``
+(default) is the plain fixed-codec path, bit for bit.  Start a
+frontier fit from ``encode_state(zspecs, cfg, state)`` so the width
+vector is in the scan carry from round 0.
+
 Streaming + host staging (``FederatedConfig.stream_chunk``, the
 unbounded-K mode): ``federated_fit``'s scanned round body reroutes to
 the chunk-fold accumulator automatically when the config streams — the

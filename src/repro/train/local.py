@@ -85,16 +85,23 @@ def evaluate(
     *,
     mode: str = "sample",
     n_samples: int = 100,
+    carried: Optional[str] = None,
 ):
     """Mean/std metric over sampled networks (paper's 'sampled accuracy'),
-    or the expected (mode='continuous') / discretized network."""
+    or the expected (mode='continuous') / discretized network.
+
+    ``carried`` names the downlink codec of an ENCODED score state
+    (explicit-tag routing, validated against the leaves; the packed
+    sub-byte codecs share a uint32 carrier, so dtype sniffing alone is
+    ambiguous there).  None sniffs the dtype, raising on ambiguity."""
     if mode in ("continuous", "discretize"):
-        params = sample_weights(zspecs, state, key, mode=mode)
+        params = sample_weights(zspecs, state, key, mode=mode,
+                                carried=carried)
         v = float(metric_fn(params))
         return v, 0.0
     vals = []
     for i in range(n_samples):
         params = sample_weights(zspecs, state, jax.random.fold_in(key, i),
-                                mode="sample")
+                                mode="sample", carried=carried)
         vals.append(float(metric_fn(params)))
     return float(np.mean(vals)), float(np.std(vals))

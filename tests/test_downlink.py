@@ -68,7 +68,9 @@ from repro.core.sampling import (
 from repro.core.zampling import MaskProgram, infer_downlink, sample_weights
 from repro.kernels import ops
 
-CODECS = ("f32", "u16", "u8")
+CODECS = ("f32", "u16", "u8", "packed4", "packed2")
+# per-coordinate-word quantized codecs; the packed sub-byte codecs
+# (uint32 lane carrier) have their own suite in test_packed_downlink.py
 QUANTIZED = ("u16", "u8")
 
 
